@@ -1,0 +1,78 @@
+"""Roofline table builder: reads experiments/dryrun/*.json into the
+EXPERIMENTS.md §Roofline markdown table (single-pod mesh, per assignment).
+
+Run after the dry-run sweep:
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+  PYTHONPATH=src python -m benchmarks.roofline [--mesh pod16x16]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+
+def fmt_ms(s: float) -> str:
+    return f"{s*1e3:.1f}"
+
+
+def load(out_dir: Path, mesh: str, tag: str = "") -> list[dict]:
+    rows = []
+    suffix = f"_{tag}.json" if tag else ".json"
+    for fp in sorted(out_dir.glob(f"*_{mesh}{suffix}")):
+        rec = json.loads(fp.read_text())
+        if tag == "" and rec.get("tag"):
+            continue
+        rows.append(rec)
+    return rows
+
+
+def table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | status | compute ms | memory ms | coll ms | "
+           "dominant | useful | fit16GiB | note |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in rows:
+        if r["status"] == "skip":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | SKIP | - | - | - | - | - | - | {r['reason']} |")
+            continue
+        if r["status"] == "error":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | ERROR | - | - | - | - | - | - | {r['error'][:60]} |")
+            continue
+        t = r["roofline"]
+        mem = r["memory"]
+        note = f"xla-fallback mem {fmt_ms(t.get('memory_xla_s', 0))}ms"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | ok | {fmt_ms(t['compute_s'])} | "
+            f"{fmt_ms(t['memory_s'])} | {fmt_ms(t['collective_s'])} | "
+            f"{t['dominant']} | {t['useful_flops_ratio']:.2f} | "
+            f"{'Y' if mem['fits_16gib'] else 'OVER'} | {note} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    rows = load(Path(args.dir), args.mesh, args.tag)
+    if not rows:
+        print(f"no records for mesh={args.mesh} under {args.dir}")
+        return 1
+    print(table(rows))
+    # quick aggregate
+    ok = [r for r in rows if r["status"] == "ok"]
+    if ok:
+        doms = {}
+        for r in ok:
+            doms[r["roofline"]["dominant"]] = doms.get(r["roofline"]["dominant"], 0) + 1
+        print(f"\n{len(ok)} ok cells; dominant-term histogram: {doms}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,259 @@
+"""Benchmark harness — one function per quantified paper claim (DESIGN.md §5).
+
+The paper itself has no tables (zero quantitative evaluation), so each
+benchmark quantifies one of its qualitative claims C1..C6. Prints
+``name,us_per_call,derived`` CSV rows, plus kernel and step benches.
+
+Run: PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def row(name: str, us: float, derived: str):
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}")
+
+
+def timeit(fn, n: int, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6  # us
+
+
+# ---------------------------------------------------------------------------
+def bench_split(quick: bool):
+    """C1: notebook -> DAG -> steps translation throughput."""
+    from repro.core import Notebook, split_pipeline
+
+    n_cells = 40 if quick else 120
+    srcs = ["v0 = 1"] + [f"v{i} = v{i-1} + {i}" for i in range(1, n_cells)]
+    for i in range(4, n_cells, 5):
+        srcs[i] = "# %%pipe\n" + srcs[i]
+    nb = Notebook.from_sources(srcs)
+    us = timeit(lambda: split_pipeline(nb), 10)
+    g = split_pipeline(nb)
+    row("split_notebook", us, f"cells={n_cells};steps={len(g.steps)};cells_per_s={n_cells/us*1e6:.0f}")
+
+
+def bench_bus(quick: bool):
+    """C5: topic bus producer/consumer throughput."""
+    from repro.core import TopicBus
+
+    n = 500 if quick else 3000
+    d = tempfile.mkdtemp()
+    try:
+        bus = TopicBus(d)
+        t0 = time.perf_counter()
+        for i in range(n):
+            bus.publish("t", {"i": i, "payload": "x" * 64})
+        pub_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        msgs = bus.read("t")
+        con_s = time.perf_counter() - t0
+        assert len(msgs) == n
+        row("bus_publish", pub_s / n * 1e6, f"msgs_per_s={n/pub_s:.0f}")
+        row("bus_consume", con_s / n * 1e6, f"msgs_per_s={n/con_s:.0f}")
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def bench_storage(quick: bool):
+    """C4: artifact store put/get bandwidth, both tiers."""
+    from repro.core import ArtifactStore
+
+    size = 1 << 20 if quick else 1 << 24  # 1MB / 16MB
+    blob = np.random.default_rng(0).bytes(size)
+    d = tempfile.mkdtemp()
+    try:
+        store = ArtifactStore(d)
+        for tier in ("shared", "node"):
+            t0 = time.perf_counter()
+            ref = store.put(blob, tier=tier)
+            put_s = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            store.get(ref)
+            get_s = time.perf_counter() - t0
+            row(f"store_put_{tier}", put_s * 1e6, f"MBps={size/put_s/1e6:.0f}")
+            row(f"store_get_{tier}", get_s * 1e6, f"MBps={size/get_s/1e6:.0f}")
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def bench_ckpt(quick: bool):
+    """C6: checkpoint save/restore bandwidth + elastic reshard."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.checkpoint import CheckpointManager
+
+    n = 1 << 20 if quick else 1 << 22
+    state = {"params": {f"w{i}": jnp.arange(n // 4, dtype=jnp.float32) for i in range(4)}}
+    nbytes = sum(x.size * 4 for x in jax.tree.leaves(state))
+    d = tempfile.mkdtemp()
+    try:
+        ck = CheckpointManager(d)
+        t0 = time.perf_counter()
+        ck.save(1, state)
+        save_s = time.perf_counter() - t0
+        like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+        t0 = time.perf_counter()
+        ck.restore(like)
+        rest_s = time.perf_counter() - t0
+        row("ckpt_save", save_s * 1e6, f"MBps={nbytes/save_s/1e6:.0f}")
+        row("ckpt_restore", rest_s * 1e6, f"MBps={nbytes/rest_s/1e6:.0f}")
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def bench_step(quick: bool):
+    """Train + decode step latency on a reduced config (real execution)."""
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import ARCHS, reduced
+    from repro.models import build_model
+    from repro.models.api import make_batch
+    from repro.configs.base import ShapeConfig
+    from repro.train import AdamWConfig, init_train_state, make_train_step
+
+    cfg = reduced(ARCHS["llama3-8b"])
+    model = build_model(cfg)
+    opt = AdamWConfig(moment_dtype="float32")
+    state = init_train_state(model, jax.random.key(0), opt)
+    shape = ShapeConfig("b", seq_len=128, global_batch=4, kind="train")
+    batch = make_batch(cfg, shape)
+    step = jax.jit(make_train_step(model, opt, ga=1))
+    n = 3 if quick else 10
+    us = timeit(lambda: jax.block_until_ready(step(state, batch)[1]["loss"]), n)
+    tok = shape.tokens
+    row("train_step_reduced", us, f"tokens_per_s={tok/us*1e6:.0f}")
+
+    cache, logits = jax.jit(lambda p, b: model.prefill(p, b, 160))(state["params"], batch)
+    dec = jax.jit(model.decode_step)
+    toks = jnp.ones((4, 1), jnp.int32)
+    us = timeit(lambda: jax.block_until_ready(dec(state["params"], cache, toks)[1]), n)
+    row("decode_step_reduced", us, f"tok_per_s={4/us*1e6:.0f}")
+
+
+def bench_kernels(quick: bool):
+    """Pallas kernels (interpret mode) vs jnp reference — correctness + time."""
+    import jax
+
+    from repro.kernels import ops, ref
+
+    rng = np.random.default_rng(0)
+    b, s, h, kvh, dh = 1, 256, 4, 2, 64
+    q = rng.standard_normal((b, s, h, dh)).astype(np.float32)
+    k = rng.standard_normal((b, s, kvh, dh)).astype(np.float32)
+    v = rng.standard_normal((b, s, kvh, dh)).astype(np.float32)
+    f_ref = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v, causal=True))
+    f_chk = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v, causal=True, impl="xla_chunked"))
+    n = 3 if quick else 20
+    us_ref = timeit(lambda: jax.block_until_ready(f_ref(q, k, v)), n)
+    us_chk = timeit(lambda: jax.block_until_ready(f_chk(q, k, v)), n)
+    err = float(np.abs(np.asarray(f_chk(q, k, v)) - np.asarray(f_ref(q, k, v))).max())
+    row("attn_naive_xla", us_ref, "impl=naive")
+    row("attn_chunked_xla", us_chk, f"max_err={err:.2e}")
+
+    x = rng.standard_normal((1, 256, 4, 32)).astype(np.float32)
+    dt = (0.1 + 0.9 * rng.random((1, 256, 4))).astype(np.float32)
+    A = (-rng.random(4) - 0.1).astype(np.float32)
+    Bm = (rng.standard_normal((1, 256, 64)) / 8).astype(np.float32)
+    Cm = (rng.standard_normal((1, 256, 64)) / 8).astype(np.float32)
+    s_seq = jax.jit(lambda *a: ref.ssd_sequential(*a)[0])
+    s_chk = jax.jit(lambda *a: ref.ssd_chunked(*a, chunk=64)[0])
+    us_seq = timeit(lambda: jax.block_until_ready(s_seq(x, dt, A, Bm, Cm)), n)
+    us_chk2 = timeit(lambda: jax.block_until_ready(s_chk(x, dt, A, Bm, Cm)), n)
+    err = float(np.abs(np.asarray(s_chk(x, dt, A, Bm, Cm)) - np.asarray(s_seq(x, dt, A, Bm, Cm))).max())
+    row("ssd_sequential_xla", us_seq, "impl=recurrence")
+    row("ssd_chunked_xla", us_chk2, f"max_err={err:.2e};speedup={us_seq/us_chk2:.1f}x")
+
+
+def bench_recovery(quick: bool):
+    """C6: workflow wall time without vs with injected pod failures."""
+    from repro.core import ArtifactStore, Notebook, TopicBus, WorkflowScheduler, split_pipeline
+    from repro.core.faults import FaultInjector, KillRule
+    from repro.core.scheduler import RetryPolicy
+
+    srcs = ["import time\ntime.sleep(0.05)\na = 1",
+            "# %%pipe\nb = a + 1", "# %%pipe\nc = b * 2"]
+
+    def run(faults=None):
+        d = tempfile.mkdtemp()
+        try:
+            nb = Notebook.from_sources(srcs)
+            g = split_pipeline(nb)
+            sched = WorkflowScheduler(
+                g, TopicBus(Path(d) / "bus"), ArtifactStore(Path(d) / "store"),
+                retry=RetryPolicy(max_attempts=4, backoff_s=0.02),
+                fault_injector=faults)
+            t0 = time.perf_counter()
+            arts = sched.run(timeout_s=60)
+            assert arts["c"] == 4
+            return time.perf_counter() - t0
+        finally:
+            shutil.rmtree(d, ignore_errors=True)
+
+    clean = run()
+    chaotic = run(FaultInjector([KillRule(step="cell0", after_s=0.0, times=1)]))
+    row("workflow_clean", clean * 1e6, "steps=3")
+    row("workflow_chaos_1kill", chaotic * 1e6,
+        f"recovery_overhead={(chaotic-clean)*1e3:.0f}ms")
+
+
+def bench_scaling(quick: bool):
+    """Scheduler overhead vs #steps (pods)."""
+    from repro.core import ArtifactStore, Notebook, TopicBus, WorkflowScheduler, split_pipeline
+    from repro.core.scheduler import RetryPolicy
+
+    for n in ([4, 8] if quick else [4, 16, 32]):
+        srcs = ["a0 = 1"] + [f"# %%pipe\na{i} = a{i-1} + 1" for i in range(1, n)]
+        d = tempfile.mkdtemp()
+        try:
+            g = split_pipeline(Notebook.from_sources(srcs))
+            sched = WorkflowScheduler(
+                g, TopicBus(Path(d) / "bus"), ArtifactStore(Path(d) / "store"),
+                retry=RetryPolicy(backoff_s=0.01))
+            t0 = time.perf_counter()
+            sched.run(timeout_s=120)
+            wall = time.perf_counter() - t0
+            row(f"scheduler_pods_{n}", wall * 1e6, f"us_per_step={wall/n*1e6:.0f}")
+        finally:
+            shutil.rmtree(d, ignore_errors=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for bench in (bench_split, bench_bus, bench_storage, bench_ckpt,
+                  bench_kernels, bench_recovery, bench_scaling, bench_step):
+        bench(args.quick)
+    print(f"# total {time.time()-t0:.0f}s")
+    out = Path("experiments")
+    out.mkdir(exist_ok=True)
+    (out / "bench_results.json").write_text(
+        json.dumps([{"name": n, "us": u, "derived": d} for n, u, d in ROWS], indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""End-to-end driver: train a (reduced) smollm-360m for a few hundred steps
+under the Jup2Kub runtime with chaos injection — the train pod is killed
+twice mid-run and must recover from checkpoints, finish, and improve.
+
+This is the assignment's "end-to-end driver" example; the full-size version
+of the same pipeline is `python -m repro.launch.train --arch <id> --steps N`.
+
+Run: PYTHONPATH=src python examples/fault_tolerant_training.py
+"""
+
+import subprocess
+import sys
+
+
+def main():
+    cmd = [
+        sys.executable, "-m", "repro.launch.train",
+        "--arch", "smollm-360m", "--reduced",
+        "--steps", "200", "--batch", "16", "--seq-len", "64",
+        "--ckpt-every", "20", "--chaos",
+        "--workdir", "experiments/ft_training",
+    ]
+    print("+", " ".join(cmd))
+    raise SystemExit(subprocess.call(cmd))
+
+
+if __name__ == "__main__":
+    main()

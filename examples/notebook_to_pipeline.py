@@ -1,0 +1,99 @@
+"""The paper's headline demo: Jupyter notebook -> fault-tolerant distributed
+deployment.
+
+Takes a linear 'scientific workflow' notebook, splits it into piped sections
+(C1), seals each step into a capsule (C2), deploys pods with the paper's
+Listing-1 template (C3), runs it on the scheduler with a chaos-injected pod
+kill (C6), and shows the bus/storage dataflow (C4/C5) — then diffs the
+distributed result against the plain linear execution.
+
+Run: PYTHONPATH=src python examples/notebook_to_pipeline.py
+"""
+
+import tempfile
+from pathlib import Path
+
+from repro.core import (
+    ArtifactStore, Notebook, TopicBus, WorkflowScheduler, split_pipeline,
+)
+from repro.core.capsule import seal_step
+from repro.core.deployer import DynamicPodDeployer, PodManager
+from repro.core.faults import FaultInjector, KillRule
+from repro.core.scheduler import RetryPolicy
+
+NOTEBOOK = [
+    # a classic linear analysis notebook
+    "import math\n"
+    "samples = [math.sin(i / 7.0) + 0.1 * ((i * 2654435761) % 97 / 97.0)\n"
+    "           for i in range(2000)]",
+
+    "cleaned = [s for s in samples if abs(s) < 1.05]",
+
+    "# %%pipe\n"
+    "n = len(cleaned)\n"
+    "mean = sum(cleaned) / n",
+
+    "var = sum((s - mean) ** 2 for s in cleaned) / n\n"
+    "std = math.sqrt(var)",
+
+    "# %%pipe\n"
+    "zscores = [(s - mean) / std for s in cleaned]",
+
+    "outliers = [z for z in zscores if abs(z) > 2.0]\n"
+    "report = {'n': n, 'mean': round(mean, 4), 'std': round(std, 4),\n"
+    "          'outliers': len(outliers)}",
+]
+
+
+def main():
+    nb = Notebook.from_sources(NOTEBOOK, name="analysis")
+    print(f"notebook: {len(nb.cells)} cells")
+
+    # --- C1: split ---
+    graph = split_pipeline(nb)
+    print(f"\npiped-section split -> {len(graph.steps)} steps")
+    print(graph.to_dot())
+
+    # --- C2: capsules ---
+    print("\ncapsules (ReproZip analogue):")
+    for name, step in graph.steps.items():
+        img = seal_step(step)
+        print(f"  {img.tag}  packages={list(img.capsule.packages)}")
+
+    with tempfile.TemporaryDirectory() as d:
+        d = Path(d)
+        # --- C3: deployment manifests (paper Listing 1) ---
+        dep = DynamicPodDeployer(PodManager(graph), out_dir=d / "k8s")
+        specs = dep.deploy_all()
+        print(f"\nk8s manifests -> {d/'k8s'}:")
+        for s in specs:
+            print(f"  {s.name}: role={s.role} replicas={s.replicas} "
+                  f"in={s.in_topics} out={s.out_topics}")
+        sample = (d / "k8s" / f"{specs[0].name}-deployment.yaml").read_text()
+        print("\n--- rendered Deployment (first 12 lines) ---")
+        print("\n".join(sample.splitlines()[:12]))
+
+        # --- C4/C5/C6: run with chaos ---
+        bus = TopicBus(d / "bus")
+        store = ArtifactStore(d / "store")
+        victim = sorted(graph.steps)[1] if len(graph.steps) > 1 else sorted(graph.steps)[0]
+        faults = FaultInjector([KillRule(step=victim, after_s=0.0, times=1)])
+        sched = WorkflowScheduler(graph, bus, store,
+                                  retry=RetryPolicy(max_attempts=4, backoff_s=0.02),
+                                  fault_injector=faults)
+        print(f"\nrunning distributed (chaos: killing '{victim}' once)...")
+        arts = sched.run(timeout_s=60)
+
+        linear = nb.run_linear()
+        print(f"\ndistributed report: {arts['report']}")
+        print(f"linear      report: {linear['report']}")
+        assert arts["report"] == linear["report"], "MISMATCH"
+        print("MATCH — fault-tolerant distributed run reproduces the notebook")
+
+        events = [e["kind"] for e in sched.events.history()]
+        print("\nevents:", {k: events.count(k) for k in sorted(set(events))})
+        print("bus topics:", bus.topics())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Serving example: batched requests through the bus with autoscaling.
+
+Requests flow through the Kafka-analogue topic, engine workers batch and
+generate, the HPA-analogue scales workers with consumer lag.
+
+Run: PYTHONPATH=src python examples/serve_smollm.py
+"""
+
+import subprocess
+import sys
+
+
+def main():
+    cmd = [
+        sys.executable, "-m", "repro.launch.serve",
+        "--arch", "smollm-360m", "--reduced",
+        "--requests", "32", "--max-new", "8", "--max-batch", "4",
+        "--workdir", "experiments/serving",
+    ]
+    print("+", " ".join(cmd))
+    raise SystemExit(subprocess.call(cmd))
+
+
+if __name__ == "__main__":
+    main()

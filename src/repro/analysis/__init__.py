@@ -1,0 +1,4 @@
+from repro.analysis.hlo import HloCost, analyze_hlo
+from repro.analysis.roofline import HW, RooflineTerms, roofline_terms
+
+__all__ = ["HloCost", "analyze_hlo", "HW", "RooflineTerms", "roofline_terms"]

@@ -1,0 +1,448 @@
+"""HLO-text cost analyzer with while-loop trip-count correction.
+
+``compiled.cost_analysis()`` counts a while body ONCE (verified in
+DESIGN.md §7) — useless for scanned layer stacks. This module parses
+``compiled.as_text()`` instead:
+
+  * builds the computation call graph (while body/cond, fusion calls,
+    conditionals, to_apply reducers),
+  * extracts while trip counts from the loop-condition compare constant,
+  * propagates execution multipliers from ENTRY down,
+  * sums dot FLOPs (2*O*K from shapes + contracting dims),
+  * sums per-op HBM traffic with op-specific rules (DUS counts the slice,
+    not the buffer; gathers count output, not the table — see _op_bytes),
+  * sums collective bytes by kind (all-reduce / all-gather / reduce-scatter
+    / all-to-all / collective-permute), multiplier-corrected.
+
+The numbers are per-DEVICE (SPMD modules are per-device programs).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all", "collective-broadcast",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_ASSIGN_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_CALL_RE = re.compile(r"(?<![\w\"/])([a-zA-Z][\w\-]*)\(")
+_COMP_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?.*\{\s*$")
+_PARAM_RE = re.compile(r"%?([\w.\-]+):\s*([a-z0-9]+\[[\d,]*\])")
+
+
+def _parse_op_line(line: str):
+    """Split an HLO instruction into (name, type, kind, args, attrs).
+
+    Handles tuple-typed results (parenthesized types) and attrs containing
+    parens/quotes by depth-scanning the op's argument list instead of
+    trusting a single greedy regex.
+    """
+    m = _ASSIGN_RE.match(line)
+    if not m:
+        return None
+    name, rest = m.group(1), m.group(2)
+    mc = _CALL_RE.search(rest)
+    if not mc:
+        return None
+    kind = mc.group(1)
+    type_str = rest[: mc.start()].strip()
+    depth = 0
+    end = None
+    for i in range(mc.end() - 1, len(rest)):
+        ch = rest[i]
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    if end is None:
+        return None
+    args = rest[mc.end(): end]
+    attrs = rest[end + 1:]
+    return _Op(name, type_str, kind, args, attrs)
+
+
+def _shape_bytes(type_str: str) -> float:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d] if m.group(2) else []
+
+
+@dataclass
+class _Op:
+    name: str
+    type_str: str
+    kind: str
+    args_str: str
+    attrs: str
+
+
+@dataclass
+class _Computation:
+    name: str
+    is_entry: bool
+    ops: list[_Op] = field(default_factory=list)
+    symbols: dict[str, str] = field(default_factory=dict)  # opname -> type str
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    hbm_bytes_kernelized: float = 0.0
+    collective_bytes: dict[str, float] = field(default_factory=dict)
+    while_trips: dict[str, int] = field(default_factory=dict)
+    dot_flops_by_comp: dict[str, float] = field(default_factory=dict)
+    bytes_by_comp: dict[str, float] = field(default_factory=dict)
+    collective_count: int = 0
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def parse_computations(hlo_text: str) -> dict[str, _Computation]:
+    comps: dict[str, _Computation] = {}
+    cur: _Computation | None = None
+    for line in hlo_text.splitlines():
+        if cur is None:
+            m = _COMP_HEADER_RE.match(line)
+            # op lines have " = "; header param lists only have /*index=N*/
+            if m and " = " not in line.split("{")[0]:
+                cur = _Computation(name=m.group(2), is_entry=bool(m.group(1)))
+                # parameters declared in the header carry shapes
+                for pname, ptype in _PARAM_RE.findall(line):
+                    cur.symbols[pname] = ptype
+                continue
+        else:
+            if line.startswith("}"):
+                comps[cur.name] = cur
+                cur = None
+                continue
+            op = _parse_op_line(line)
+            if op is not None:
+                cur.ops.append(op)
+                cur.symbols[op.name] = op.type_str.strip()
+    return comps
+
+
+def _callees(op: _Op) -> list[tuple[str, str]]:
+    """(callee_name, relation) pairs referenced by an op's attrs."""
+    out = []
+    for rel in ("body", "condition", "calls", "to_apply"):
+        for m in re.finditer(rel + r"=%?([\w.\-]+)", op.attrs):
+            out.append((m.group(1), rel))
+    m = re.search(r"branch_computations=\{([^}]*)\}", op.attrs)
+    if m:
+        for name in m.group(1).split(","):
+            out.append((name.strip().lstrip("%"), "branch"))
+    return out
+
+
+def _trip_count(cond: _Computation) -> int:
+    """Extract the loop bound from the condition's compare-with-constant."""
+    consts: dict[str, int] = {}
+    for op in cond.ops:
+        if op.kind == "constant":
+            m = re.fullmatch(r"\s*(-?\d+)\s*", op.args_str)
+            if m:
+                consts[op.name] = int(m.group(1))
+    best = 0
+    for op in cond.ops:
+        # the bound constant feeds either a compare or a fusion wrapping one
+        if op.kind in ("compare", "fusion"):
+            for ref in re.findall(r"%([\w.\-]+)", op.args_str):
+                if ref in consts:
+                    best = max(best, consts[ref])
+    if best == 0 and consts:
+        best = max(consts.values())
+    return max(best, 1)
+
+
+def _operand_types(op: _Op, comp: _Computation) -> list[str]:
+    """Types of an op's operands (inline-typed or via the symbol table)."""
+    out = []
+    # split args at top level (no nested parens in operand lists normally)
+    args = [a.strip() for a in re.split(r",(?![^(]*\))", op.args_str) if a.strip()]
+    for a in args:
+        m = re.match(r"^([a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?)\s+%?[\w.\-]+$", a)
+        if m:
+            out.append(m.group(1))
+            continue
+        m = re.match(r"^%?([\w.\-]+)$", a)
+        if m and m.group(1) in comp.symbols:
+            out.append(comp.symbols[m.group(1)])
+    return out
+
+
+def _dot_flops(op: _Op, comp: _Computation) -> float:
+    out_elems = 1
+    for d in _shape_dims(op.type_str):
+        out_elems *= d
+    k = 1
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
+    ops_types = _operand_types(op, comp)
+    if m and ops_types:
+        lhs_dims = _shape_dims(ops_types[0])
+        for idx in m.group(1).split(","):
+            if idx and int(idx) < len(lhs_dims):
+                k *= lhs_dims[int(idx)]
+    return 2.0 * out_elems * k
+
+
+_ZERO_TRAFFIC = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "reshape", "after-all", "partition-id", "replica-id", "iota",
+}
+
+
+def _param_effective_bytes(comp: _Computation) -> dict[str, float]:
+    """Effective read bytes per parameter of a fusion computation.
+
+    XLA fuses ``dynamic-slice``/``gather`` of the big stacked scan operands
+    INTO consumers, so a naive "operand bytes" model charges the full
+    stacked array once per loop iteration (~1000x overcount). If every use
+    of a parameter inside the fusion is a slice of it, the fusion only
+    reads the slice; if a parameter is only the destination of the ROOT
+    dynamic-update-slice, it isn't read at all (in-place accumulator).
+    """
+    # alias chains: bitcast/reshape/copy of a param behave like the param
+    alias_of: dict[str, str] = {}
+    for op in comp.ops:
+        if op.kind in ("bitcast", "reshape", "copy", "transpose"):
+            refs = re.findall(r"%([\w.\-]+)", op.args_str)
+            if len(refs) == 1:
+                alias_of[op.name] = refs[0]
+
+    def base(name: str) -> str:
+        seen = set()
+        while name in alias_of and name not in seen:
+            seen.add(name)
+            name = alias_of[name]
+        return name
+
+    params = {op.name: op.type_str for op in comp.ops if op.kind == "parameter"}
+    uses: dict[str, list[tuple[_Op, int]]] = {p: [] for p in params}
+    for op in comp.ops:
+        if op.kind == "parameter":
+            continue
+        refs = re.findall(r"%([\w.\-]+)", op.args_str)
+        for pos, r in enumerate(refs):
+            b = base(r)
+            if b in uses:
+                uses[b].append((op, pos))
+
+    out: dict[str, float] = {}
+    for pname, ptype in params.items():
+        ulist = [u for u in uses[pname] if u[0].kind not in ("bitcast", "reshape", "copy", "transpose")]
+        if ulist and all(
+            (u.kind == "dynamic-slice" and pos == 0)
+            or (u.kind == "gather" and pos == 0)
+            for u, pos in ulist
+        ):
+            out[pname] = sum(_shape_bytes(u.type_str) for u, _ in ulist)
+        elif ulist and all(
+            u.kind == "dynamic-update-slice" and pos == 0 for u, pos in ulist
+        ):
+            out[pname] = 0.0  # pure in-place accumulator destination
+        else:
+            out[pname] = _shape_bytes(ptype)
+    return out
+
+
+def _fusion_output_bytes(comp: _Computation) -> float:
+    """Output bytes of a fusion: DUS roots write the slice, not the buffer."""
+    root = next((op for op in reversed(comp.ops)), None)
+    if root is None:
+        return 0.0
+
+    def op_write_bytes(op: _Op) -> float:
+        if op.kind == "dynamic-update-slice":
+            in_types = _operand_types(op, comp)
+            return _shape_bytes(in_types[1]) if len(in_types) > 1 else _shape_bytes(op.type_str)
+        return _shape_bytes(op.type_str)
+
+    if root.kind == "tuple":
+        by_name = {op.name: op for op in comp.ops}
+        total = 0.0
+        for r in re.findall(r"%([\w.\-]+)", root.args_str):
+            total += op_write_bytes(by_name[r]) if r in by_name else 0.0
+        return total
+    return op_write_bytes(root)
+
+
+def _fusion_bytes(op: _Op, comps: dict[str, _Computation]) -> float | None:
+    callee = next((n for n, r in _callees(op) if r == "calls"), None)
+    if callee is None or callee not in comps:
+        return None
+    called = comps[callee]
+    reads = sum(_param_effective_bytes(called).values())
+    writes = _fusion_output_bytes(called)
+    return reads + writes
+
+
+def _op_bytes(op: _Op, comp: _Computation, comps: dict[str, _Computation] | None = None) -> float:
+    """Op-specific HBM traffic model (see module docstring)."""
+    kind = op.kind
+    if kind in _ZERO_TRAFFIC:
+        return 0.0
+    if kind == "fusion" and comps is not None:
+        fb = _fusion_bytes(op, comps)
+        if fb is not None:
+            return fb
+    out_b = _shape_bytes(op.type_str)
+    in_types = _operand_types(op, comp)
+    in_b = sum(_shape_bytes(t) for t in in_types)
+    if kind == "dynamic-update-slice":
+        upd = _shape_bytes(in_types[1]) if len(in_types) > 1 else out_b
+        return 2.0 * upd
+    if kind == "dynamic-slice":
+        return 2.0 * out_b
+    if kind == "gather":
+        idx = _shape_bytes(in_types[1]) if len(in_types) > 1 else 0.0
+        return 2.0 * out_b + idx
+    if kind == "scatter":
+        upd = _shape_bytes(in_types[2]) if len(in_types) > 2 else out_b
+        idx = _shape_bytes(in_types[1]) if len(in_types) > 1 else 0.0
+        return 2.0 * upd + idx + out_b
+    if kind in ("broadcast", "copy", "transpose", "convert", "slice", "pad"):
+        return in_b + out_b
+    if kind in ("while", "call", "conditional"):
+        return 0.0  # bodies are counted via multipliers
+    return in_b + out_b
+
+
+def analyze_hlo(hlo_text: str) -> HloCost:
+    comps = parse_computations(hlo_text)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+
+    # ---- multipliers ----
+    mult: dict[str, float] = {entry.name: 1.0}
+    fusion_called: set[str] = set()
+    trips: dict[str, int] = {}
+    order = [entry.name]
+    seen = {entry.name}
+    while order:
+        cname = order.pop(0)
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        m = mult.get(cname, 1.0)
+        for op in comp.ops:
+            callees = _callees(op)
+            trip = 1
+            if op.kind == "while":
+                cond_name = next((n for n, r in callees if r == "condition"), None)
+                if cond_name and cond_name in comps:
+                    trip = _trip_count(comps[cond_name])
+                    trips[op.name] = trip
+            for callee, rel in callees:
+                factor = trip if (op.kind == "while" and rel in ("body", "condition")) else 1
+                newm = m * factor
+                mult[callee] = max(mult.get(callee, 0.0), newm)
+                if op.kind == "fusion" and rel == "calls":
+                    fusion_called.add(callee)
+                if callee not in seen:
+                    seen.add(callee)
+                    order.append(callee)
+                elif newm > mult.get(callee, 0.0) - 1e-9:
+                    order.append(callee)  # propagate larger multiplier
+
+    cost = HloCost(while_trips=trips)
+    for cname, comp in comps.items():
+        m = mult.get(cname)
+        if m is None:
+            continue  # unreachable (dead) computation
+        comp_flops = 0.0
+        comp_bytes = 0.0
+        for op in comp.ops:
+            if op.kind in ("dot", "convolution"):
+                comp_flops += _dot_flops(op, comp) * m
+            if op.kind in COLLECTIVES:
+                b = sum(_shape_bytes(t) for t in _operand_types(op, comp))
+                if b == 0.0:
+                    b = _shape_bytes(op.type_str)
+                cost.collective_bytes[op.kind] = (
+                    cost.collective_bytes.get(op.kind, 0.0) + b * m
+                )
+                cost.collective_count += 1
+            if cname not in fusion_called:
+                comp_bytes += _op_bytes(op, comp, comps) * m
+        cost.bytes_by_comp[cname] = comp_bytes
+        cost.hbm_bytes += comp_bytes
+        if comp_flops:
+            cost.dot_flops_by_comp[cname] = comp_flops
+            cost.flops += comp_flops
+
+    # ---- kernelized traffic: innermost scans charged as fused kernels ----
+    # An innermost while (no nested while in its body subtree) maps exactly
+    # onto a VMEM-resident Pallas kernel: carries/loop-invariants stay in
+    # VMEM, so the loop's true HBM traffic is its operands + outputs ONCE
+    # (per execution), not per-iteration re-reads. This is the number the
+    # TPU target achieves with kernels/flash_attention.py + ssd_scan.py;
+    # `hbm_bytes` (as-lowered) is the pure-XLA fallback.
+    def subtree(comp_name: str, acc: set[str]):
+        if comp_name in acc or comp_name not in comps:
+            return
+        acc.add(comp_name)
+        for op in comps[comp_name].ops:
+            for callee, _rel in _callees(op):
+                subtree(callee, acc)
+
+    kernelized_delta = 0.0
+    for cname, comp in comps.items():
+        m = mult.get(cname)
+        if m is None or cname in fusion_called:
+            continue
+        for op in comp.ops:
+            if op.kind != "while":
+                continue
+            body = next((n for n, r in _callees(op) if r == "body"), None)
+            cond = next((n for n, r in _callees(op) if r == "condition"), None)
+            if body is None:
+                continue
+            sub: set[str] = set()
+            subtree(body, sub)
+            if cond:
+                subtree(cond, sub)
+            if any(o.kind == "while" for s in sub if s in comps for o in comps[s].ops):
+                continue  # not innermost
+            inside = sum(cost.bytes_by_comp.get(s, 0.0) for s in sub)
+            once = (
+                sum(_shape_bytes(t) for t in _operand_types(op, comp))
+                + _shape_bytes(op.type_str)
+            ) * m
+            kernelized_delta += inside - min(once, inside)
+    cost.hbm_bytes_kernelized = cost.hbm_bytes - kernelized_delta
+    return cost

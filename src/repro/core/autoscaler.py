@@ -1,0 +1,63 @@
+"""Horizontal autoscaler (paper §3.5 HPA), lag/throughput driven.
+
+Watches a bus topic's consumer lag (serving) or heartbeat step-rate
+(training) and computes a desired replica count in [min, max] with
+hysteresis. For training, a scale decision is an *elastic rescale event*
+(checkpoint -> reshard -> resume; see elastic.py) rather than naive pod
+addition — DESIGN.md changed-assumption #3.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+from repro.core.bus import TopicBus
+from repro.core.events import EventLog
+
+
+@dataclass
+class AutoscalerConfig:
+    min_replicas: int = 1
+    max_replicas: int = 8
+    target_lag_per_replica: float = 8.0
+    scale_down_grace_s: float = 1.0  # hysteresis: don't thrash downward
+
+
+@dataclass
+class Autoscaler:
+    bus: TopicBus
+    topic: str
+    group: str
+    cfg: AutoscalerConfig = field(default_factory=AutoscalerConfig)
+    events: EventLog | None = None
+    current: int = 1
+    _last_scale_down_ok: float = field(default_factory=time.time)
+
+    def desired_replicas(self) -> int:
+        lag = self.bus.lag(self.topic, self.group)
+        want = max(1, -(-lag // int(self.cfg.target_lag_per_replica)))  # ceil
+        return max(self.cfg.min_replicas, min(self.cfg.max_replicas, want))
+
+    def observe(self) -> tuple[int, bool]:
+        """Returns (desired, changed). Applies hysteresis on scale-down."""
+        desired = self.desired_replicas()
+        now = time.time()
+        if desired > self.current:
+            changed = True
+        elif desired < self.current:
+            if now - self._last_scale_down_ok < self.cfg.scale_down_grace_s:
+                return self.current, False
+            changed = True
+        else:
+            self._last_scale_down_ok = now
+            return self.current, False
+        old = self.current
+        self.current = desired
+        self._last_scale_down_ok = now
+        if self.events is not None:
+            self.events.emit(
+                "autoscale", step=self.topic, attempt=-1,
+                old=old, new=desired, lag=self.bus.lag(self.topic, self.group),
+            )
+        return desired, changed

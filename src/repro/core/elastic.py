@@ -1,0 +1,61 @@
+"""Elastic rescale: rolling-update semantics for sharded training state.
+
+The paper's RollingUpdate (maxSurge/maxUnavailable) moves stateless pods one
+at a time. For training, "moving a pod" means re-laying-out the sharded
+TrainState onto a different mesh. The primitive here:
+
+    plan  = RescalePlan(state_axes, old_mesh, new_mesh)
+    state = plan.apply(state)        # in-memory reshard (device_put)
+or through a checkpoint boundary (node count actually changed):
+    ckpt.save(step, state); state = ckpt.restore(like, shardings=plan.new_shardings)
+
+``rolling_phases`` yields the paper-faithful phase sequence (cordon/drain ≤
+maxUnavailable slices -> reshard -> resume) that the trainer logs as events.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Iterator
+
+import jax
+from jax.sharding import Mesh
+
+from repro.parallel import make_shardings
+
+
+@dataclass
+class RescalePlan:
+    state_axes: Any
+    new_mesh: Mesh
+    rules: dict | None = None
+
+    def new_shardings(self, state_shapes: Any = None):
+        return make_shardings(
+            self.state_axes, self.new_mesh, rules=self.rules, shapes_tree=state_shapes
+        )
+
+    def apply(self, state: Any) -> Any:
+        shardings = self.new_shardings(state)
+        return jax.tree.map(
+            lambda x, s: jax.device_put(x, s), state, shardings
+        )
+
+
+def rolling_phases(
+    old_slices: int, new_slices: int, max_unavailable: int = 1
+) -> Iterator[dict]:
+    """Phase records for a rolling data-parallel rescale old->new."""
+    yield {"phase": "checkpoint_barrier", "old": old_slices, "new": new_slices}
+    moved = 0
+    delta = abs(new_slices - old_slices)
+    while moved < delta:
+        batch = min(max_unavailable, delta - moved)
+        yield {
+            "phase": "drain" if new_slices < old_slices else "surge",
+            "slices": batch,
+            "progress": f"{moved + batch}/{delta}",
+        }
+        moved += batch
+    yield {"phase": "reshard", "target_slices": new_slices}
+    yield {"phase": "resume", "slices": new_slices}

@@ -1,0 +1,60 @@
+"""Chaos/fault injection used by the FT integration tests and examples.
+
+Deterministic (seeded) pod-killing: the injector arms WorkerPods' kill
+switches according to a schedule or a seeded random process — the test
+harness for every paper-§3.5 claim (retries, probes, restart-from-ckpt).
+"""
+
+from __future__ import annotations
+
+import random
+import threading
+import time
+from dataclasses import dataclass, field
+
+
+@dataclass
+class KillRule:
+    step: str
+    attempt: int | None = None     # None: any attempt
+    after_s: float = 0.0           # kill this long after the pod starts
+    times: int = 1                 # how many attempts to kill in total
+
+
+class FaultInjector:
+    def __init__(self, rules: list[KillRule] | None = None, seed: int = 0,
+                 random_kill_prob: float = 0.0):
+        self.rules = list(rules or [])
+        self.rng = random.Random(seed)
+        self.random_kill_prob = random_kill_prob
+        self._killed: dict[str, int] = {}
+        self._timers: list[threading.Timer] = []
+
+    def on_pod_start(self, pod) -> None:
+        """Called by the scheduler for every launched WorkerPod."""
+        step = pod.image.step.name
+        for rule in self.rules:
+            if rule.step != step:
+                continue
+            if rule.attempt is not None and rule.attempt != pod.attempt:
+                continue
+            if self._killed.get(step, 0) >= rule.times:
+                continue
+            self._killed[step] = self._killed.get(step, 0) + 1
+            t = threading.Timer(
+                rule.after_s, pod.kill_switch.kill, kwargs={"reason": f"chaos:{step}"}
+            )
+            t.daemon = True
+            t.start()
+            self._timers.append(t)
+            return
+        if self.random_kill_prob and self.rng.random() < self.random_kill_prob:
+            delay = self.rng.uniform(0.01, 0.2)
+            t = threading.Timer(delay, pod.kill_switch.kill, kwargs={"reason": "chaos:random"})
+            t.daemon = True
+            t.start()
+            self._timers.append(t)
+
+    def cancel_all(self):
+        for t in self._timers:
+            t.cancel()

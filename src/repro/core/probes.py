@@ -1,0 +1,92 @@
+"""Liveness/readiness probes (paper §3.5), bus-record edition.
+
+A pod's step loop publishes heartbeats on the ``health`` topic. The monitor
+declares a pod:
+  * not READY  — no heartbeat yet (still initializing / compiling),
+  * LIVE       — last heartbeat within ``liveness_window``,
+  * DEAD       — window exceeded -> the scheduler restarts it from the last
+                 checkpoint.
+
+Stronger than the paper's HTTP probes: a heartbeat is only written when the
+step makes *forward progress* (e.g. every k train steps), so a livelocked
+pod is detected too, not just a crashed one.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+from repro.core.bus import TopicBus
+
+TOPIC = "health"
+
+
+@dataclass
+class PodHealth:
+    pod: str
+    last_ts: float
+    last_progress: int
+    ready: bool
+
+    def state(self, now: float, window: float) -> str:
+        if not self.ready:
+            return "not_ready"
+        return "live" if (now - self.last_ts) <= window else "dead"
+
+
+class HeartbeatWriter:
+    def __init__(self, bus: TopicBus, pod: str):
+        self.bus, self.pod = bus, pod
+
+    def ready(self):
+        self.bus.publish(TOPIC, {"pod": self.pod, "kind": "ready"}, key=self.pod)
+
+    def beat(self, progress: int = 0, **info):
+        self.bus.publish(
+            TOPIC,
+            {"pod": self.pod, "kind": "beat", "progress": progress, **info},
+            key=self.pod,
+        )
+
+
+class HealthMonitor:
+    def __init__(self, bus: TopicBus, liveness_window_s: float = 10.0):
+        self.bus = bus
+        self.window = liveness_window_s
+        self._state: dict[str, PodHealth] = {}
+        self._cursor = 0
+
+    def refresh(self):
+        msgs = self.bus.read(TOPIC, start=self._cursor)
+        for m in msgs:
+            self._cursor = m.offset + 1
+            v = m.value
+            pod = v["pod"]
+            h = self._state.get(pod) or PodHealth(pod, 0.0, 0, False)
+            if v["kind"] == "ready":
+                h.ready = True
+            h.last_ts = m.ts
+            h.last_progress = v.get("progress", h.last_progress)
+            self._state[pod] = h
+
+    def status(self, pod: str) -> str:
+        self.refresh()
+        h = self._state.get(pod)
+        if h is None:
+            return "unknown"
+        return h.state(time.time(), self.window)
+
+    def dead_pods(self) -> list[str]:
+        self.refresh()
+        now = time.time()
+        return [p for p, h in self._state.items() if h.state(now, self.window) == "dead"]
+
+    def progress(self, pod: str) -> int:
+        self.refresh()
+        h = self._state.get(pod)
+        return h.last_progress if h else 0
+
+    def heartbeat_times(self) -> dict[str, float]:
+        self.refresh()
+        return {p: h.last_ts for p, h in self._state.items()}

@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, SyntheticCorpus, PrefetchLoader
+
+__all__ = ["DataConfig", "SyntheticCorpus", "PrefetchLoader"]

@@ -1,0 +1,119 @@
+"""jit'd public wrappers around the Pallas kernels with XLA fallbacks.
+
+``impl`` selection:
+  * "pallas"      — the Pallas TPU kernel (pass ``interpret=True`` on CPU).
+  * "xla_chunked" — pure-jnp chunked implementations from ``ref.py``
+                    (bounded memory; the default lowering path everywhere in
+                    this repo since the container has no TPU).
+  * "naive"       — full-matrix references (tests/small inputs only).
+  * "auto"        — "pallas" on TPU backends, else "xla_chunked".
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.ssd_scan import ssd_scan_bhsp
+
+
+def _auto_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "xla_chunked"
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(
+    q: jax.Array,  # (B, Sq, H, D)
+    k: jax.Array,  # (B, Skv, KVH, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    impl: str = "auto",
+    block_q: int = 256,
+    block_kv: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Multi-head / grouped-query attention. Returns (B, Sq, H, D)."""
+    if impl == "auto":
+        impl = _auto_impl()
+    if impl == "naive":
+        return ref.flash_attention_ref(q, k, v, causal=causal, scale=scale)
+    if impl == "xla_chunked":
+        return ref.flash_attention_chunked(
+            q, k, v, causal=causal, scale=scale, chunk_kv=block_kv
+        )
+    if impl == "pallas":
+        qt = jnp.swapaxes(q, 1, 2)  # (B, H, S, D)
+        kt = jnp.swapaxes(k, 1, 2)
+        vt = jnp.swapaxes(v, 1, 2)
+        out = flash_attention_bhsd(
+            qt, kt, vt,
+            causal=causal, scale=scale,
+            block_q=block_q, block_kv=block_kv,
+            interpret=interpret,
+        )
+        return jnp.swapaxes(out, 1, 2)
+    raise ValueError(f"unknown attention impl {impl!r}")
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD
+# ---------------------------------------------------------------------------
+
+
+def ssd_scan(
+    x: jax.Array,   # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H)
+    A: jax.Array,   # (H,)
+    Bm: jax.Array,  # (B, S, N)
+    Cm: jax.Array,  # (B, S, N)
+    *,
+    chunk: int = 256,
+    impl: str = "auto",
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan. Returns (y (B,S,H,P), final_state (B,H,P,N) f32).
+
+    Handles S not divisible by ``chunk``: the bulk runs chunked, the
+    remainder runs the exact sequential recurrence carrying the state.
+    """
+    if impl == "auto":
+        impl = _auto_impl()
+    if impl == "naive":
+        return ref.ssd_sequential(x, dt, A, Bm, Cm)
+
+    s = x.shape[1]
+    chunk_eff = min(chunk, s)
+    rem = s % chunk_eff
+    bulk = s - rem
+
+    def run_bulk(xb, dtb, bb, cb):
+        if impl == "xla_chunked":
+            return ref.ssd_chunked(xb, dtb, A, bb, cb, chunk=chunk_eff)
+        if impl == "pallas":
+            xt = jnp.swapaxes(xb, 1, 2)    # (B, H, S, P)
+            dtt = jnp.swapaxes(dtb, 1, 2)  # (B, H, S)
+            y, fs = ssd_scan_bhsp(xt, dtt, A, bb, cb, chunk=chunk_eff,
+                                  interpret=interpret)
+            return jnp.swapaxes(y, 1, 2), fs
+        raise ValueError(f"unknown ssd impl {impl!r}")
+
+    if rem == 0:
+        return run_bulk(x, dt, Bm, Cm)
+    y0, st = run_bulk(x[:, :bulk], dt[:, :bulk], Bm[:, :bulk], Cm[:, :bulk])
+    y1, st = ref.ssd_sequential(
+        x[:, bulk:], dt[:, bulk:], A, Bm[:, bulk:], Cm[:, bulk:], init_state=st
+    )
+    return jnp.concatenate([y0, y1], axis=1), st
+
+
+ssd_decode_step = ref.ssd_decode_step

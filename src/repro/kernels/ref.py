@@ -1,0 +1,265 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth (tests sweep shapes/dtypes and
+``assert_allclose`` kernel vs. ref) AND the XLA fallback implementation the
+models use on non-TPU backends.
+
+* ``flash_attention_ref``     — naive full-matrix attention (small inputs only).
+* ``flash_attention_chunked`` — online-softmax over KV chunks (bounded memory;
+  what the models lower on XLA; numerically equal to naive).
+* ``ssd_sequential``          — Mamba2 SSD as the literal per-token recurrence.
+* ``ssd_chunked``             — the SSD block-decomposition (Dao & Gu 2024),
+  matches ``ssd_sequential``; what the models lower on XLA.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(k: jax.Array, num_q_heads: int) -> jax.Array:
+    """(B, S, KVH, D) -> (B, S, H, D) by group repetition."""
+    b, s, kvh, d = k.shape
+    if kvh == num_q_heads:
+        return k
+    rep = num_q_heads // kvh
+    return jnp.repeat(k, rep, axis=2)
+
+
+def flash_attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+) -> jax.Array:
+    """Naive reference. q: (B, Sq, H, D); k/v: (B, Skv, KVH, D)."""
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    scale = scale if scale is not None else d ** -0.5
+    k = _repeat_kv(k, h)
+    v = _repeat_kv(v, h)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32)
+    logits = logits * scale
+    if causal:
+        # queries are the LAST sq positions of the skv keys (supports Sq<Skv)
+        qpos = jnp.arange(sq)[:, None] + (skv - sq)
+        kpos = jnp.arange(skv)[None, :]
+        logits = jnp.where(kpos <= qpos, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+    return out.astype(q.dtype)
+
+
+def flash_attention_chunked(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    chunk_kv: int = 512,
+) -> jax.Array:
+    """Online-softmax attention, scanning KV chunks. Memory O(Sq * chunk)."""
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    scale = scale if scale is not None else d ** -0.5
+    kvh = k.shape[2]
+    group = h // kvh
+    chunk_kv = min(chunk_kv, skv)
+    assert skv % chunk_kv == 0, (skv, chunk_kv)
+    nkv = skv // chunk_kv
+
+    # grouped views; keep kv heads un-repeated (GQA native)
+    qg = q.reshape(b, sq, kvh, group, d).astype(jnp.float32) * scale
+    kc = k.reshape(b, nkv, chunk_kv, kvh, d)
+    vc = v.reshape(b, nkv, chunk_kv, kvh, d)
+    kc = jnp.moveaxis(kc, 1, 0)  # (nkv, b, ckv, kvh, d)
+    vc = jnp.moveaxis(vc, 1, 0)
+
+    qpos = jnp.arange(sq) + (skv - sq)  # absolute position of each query
+
+    # flash-attention memory semantics require NOT saving per-chunk logits
+    # as scan residuals — checkpoint the body so backward recomputes them
+    @jax.checkpoint
+    def body(carry, inp):
+        acc, m, l = carry
+        idx, kblk, vblk = inp
+        logits = jnp.einsum(
+            "bqhgd,bkhd->bqhgk", qg, kblk.astype(jnp.float32)
+        )  # (b, sq, kvh, g, ckv)
+        if causal:
+            kpos = idx * chunk_kv + jnp.arange(chunk_kv)
+            mask = kpos[None, :] <= qpos[:, None]  # (sq, ckv)
+            logits = jnp.where(mask[None, :, None, None, :], logits, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bqhgk,bkhd->bqhgd", p, vblk.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + pv
+        return (acc_new, m_new, l_new), ()
+
+    acc0 = jnp.zeros((b, sq, kvh, group, d), jnp.float32)
+    m0 = jnp.full((b, sq, kvh, group), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, sq, kvh, group), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(
+        body, (acc0, m0, l0), (jnp.arange(nkv), kc, vc)
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD
+# ---------------------------------------------------------------------------
+
+
+def ssd_sequential(
+    x: jax.Array,      # (B, S, H, P)
+    dt: jax.Array,     # (B, S, H)       softplus-activated step sizes
+    A: jax.Array,      # (H,)            negative decay rates
+    Bm: jax.Array,     # (B, S, N)       input projection (G=1 group)
+    Cm: jax.Array,     # (B, S, N)       output projection
+    init_state: jax.Array | None = None,  # (B, H, P, N)
+) -> tuple[jax.Array, jax.Array]:
+    """Literal recurrence: h_t = exp(dt_t A) h_{t-1} + dt_t * x_t B_t^T ;  y_t = h_t C_t."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp  # (b,h,p), (b,h), (b,n), (b,n)
+        decay = jnp.exp(dtt * Af[None, :])  # (b,h)
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dtt, xt, bt)
+        state = state * decay[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", state, ct)
+        return state, y
+
+    init = (
+        init_state.astype(jnp.float32)
+        if init_state is not None
+        else jnp.zeros((b, h, p, n), jnp.float32)
+    )
+    xs = (
+        jnp.moveaxis(xf, 1, 0),
+        jnp.moveaxis(dtf, 1, 0),
+        jnp.moveaxis(Bf, 1, 0),
+        jnp.moveaxis(Cf, 1, 0),
+    )
+    state, ys = jax.lax.scan(step, init, xs)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)  # (B,S,H,P)
+    return y, state
+
+
+def _segsum(dA: jax.Array) -> jax.Array:
+    """Stable 'segment sum': L[..., i, j] = sum_{k=j+1..i} dA[..., k] for i>=j else -inf.
+
+    dA: (..., Q). Returns (..., Q, Q) lower-triangular log-decay matrix.
+    """
+    q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # cs_i - cs_j = sum_{j+1..i}
+    iota = jnp.arange(q)
+    mask = iota[:, None] >= iota[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    Bm: jax.Array,
+    Cm: jax.Array,
+    init_state: jax.Array | None = None,
+    *,
+    chunk: int = 256,
+) -> tuple[jax.Array, jax.Array]:
+    """Block decomposition of the SSD recurrence (matches ssd_sequential).
+
+    Splits S into chunks of length Q; within-chunk term is a masked
+    attention-like matmul, cross-chunk term is a scan over chunk states.
+    """
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    xf = x.astype(jnp.float32).reshape(b, nc, chunk, h, p)
+    dtf = dt.astype(jnp.float32).reshape(b, nc, chunk, h)
+    Bf = Bm.astype(jnp.float32).reshape(b, nc, chunk, n)
+    Cf = Cm.astype(jnp.float32).reshape(b, nc, chunk, n)
+    Af = A.astype(jnp.float32)
+
+    dA = dtf * Af[None, None, None, :]            # (b,nc,q,h)
+    dA = jnp.moveaxis(dA, -1, -2)                  # (b,nc,h,q)
+    L = jnp.exp(_segsum(dA))                       # (b,nc,h,q,q)
+    dA_cs = jnp.cumsum(dA, axis=-1)                # (b,nc,h,q)
+    dA_total = dA_cs[..., -1]                      # (b,nc,h)
+
+    # ---- intra-chunk (diagonal blocks) ----
+    scores = jnp.einsum("bcin,bcjn->bcij", Cf, Bf)         # (b,nc,q,q)
+    scores = scores[:, :, None] * L                         # (b,nc,h,q,q)
+    xdt = xf * dtf[..., None]                               # (b,nc,q,h,p)
+    y_diag = jnp.einsum("bchij,bcjhp->bcihp", scores, xdt)
+
+    # ---- chunk states: contribution of each chunk to the carried state ----
+    decay_to_end = jnp.exp(dA_cs[..., -1:] - dA_cs)         # (b,nc,h,q)
+    states = jnp.einsum(
+        "bchq,bcqn,bcqhp->bchpn", decay_to_end, Bf, xdt
+    )                                                        # (b,nc,h,p,n)
+
+    # ---- scan chunk states ----
+    def step(carry, inp):
+        st, dtot = inp  # (b,h,p,n), (b,h)
+        new = carry * jnp.exp(dtot)[..., None, None] + st
+        return new, carry  # emit the state ENTERING this chunk
+
+    init = (
+        init_state.astype(jnp.float32)
+        if init_state is not None
+        else jnp.zeros((b, h, p, n), jnp.float32)
+    )
+    final_state, entering = jax.lax.scan(
+        step, init, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(dA_total, 1, 0))
+    )
+    entering = jnp.moveaxis(entering, 0, 1)                 # (b,nc,h,p,n)
+
+    # ---- inter-chunk output: y_off[i] = (C_i . state_in) * exp(dA_cs[i]) ----
+    decay_from_start = jnp.exp(dA_cs)                        # (b,nc,h,q)
+    y_off = jnp.einsum(
+        "bcqn,bchpn,bchq->bcqhp", Cf, entering, decay_from_start
+    )
+
+    y = (y_diag + y_off).reshape(b, s, h, p).astype(x.dtype)
+    return y, final_state
+
+
+def ssd_decode_step(
+    state: jax.Array,  # (B, H, P, N) f32
+    x_t: jax.Array,    # (B, H, P)
+    dt_t: jax.Array,   # (B, H)
+    A: jax.Array,      # (H,)
+    B_t: jax.Array,    # (B, N)
+    C_t: jax.Array,    # (B, N)
+) -> tuple[jax.Array, jax.Array]:
+    """One-token SSD recurrence for serving."""
+    dtf = dt_t.astype(jnp.float32)
+    decay = jnp.exp(dtf * A.astype(jnp.float32)[None, :])
+    upd = jnp.einsum(
+        "bh,bhp,bn->bhpn", dtf, x_t.astype(jnp.float32), B_t.astype(jnp.float32)
+    )
+    state = state * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, C_t.astype(jnp.float32))
+    return y.astype(x_t.dtype), state

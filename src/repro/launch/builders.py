@@ -1,0 +1,142 @@
+"""Cell builders: (architecture x shape x mesh) -> lowered step function.
+
+One entry point, ``lower_cell``, shared by the dry-run, the trainer and the
+perf harness, so what we analyze is exactly what we'd run.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, cell_supported
+from repro.models import build_model
+from repro.models.api import BATCH_AXES, cache_len, input_specs
+from repro.parallel import DEFAULT_RULES, make_shardings, sharding_context
+from repro.train.optimizer import AdamWConfig
+from repro.train.step import abstract_train_state, make_train_step, train_state_axes
+
+
+@dataclass
+class CellPlan:
+    cfg: ModelConfig
+    shape: ShapeConfig
+    mesh: Mesh
+    kind: str
+    lowered: Any
+    meta: dict
+
+
+def default_ga(shape: ShapeConfig, cfg: ModelConfig | None = None) -> int:
+    """Microbatch count heuristic: large-d models need smaller microbatches
+    (activation bytes/token scale with d_model); floor at 16 sequences."""
+    if shape.kind != "train":
+        return 1
+    per_micro = 16 if (cfg is not None and cfg.d_model >= 6144) else 32
+    return max(1, min(16, shape.global_batch // per_micro))
+
+
+def batch_shardings(specs: dict, mesh: Mesh, rules=None) -> dict:
+    axes = {k: BATCH_AXES[k] for k in specs}
+    return make_shardings(axes, mesh, rules=rules, shapes_tree=specs)
+
+
+def lower_cell(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh: Mesh,
+    *,
+    rules: dict | None = None,
+    ga: int | None = None,
+    opt_cfg: AdamWConfig | None = None,
+    attn_impl: str = "xla_chunked",
+    ssd_impl: str = "xla_chunked",
+) -> CellPlan:
+    ok, reason = cell_supported(cfg, shape)
+    if not ok:
+        raise ValueError(f"{cfg.name} x {shape.name}: {reason}")
+    rules = dict(rules or DEFAULT_RULES)
+    opt_cfg = opt_cfg or AdamWConfig(moment_dtype="bfloat16")
+    ga = ga if ga is not None else default_ga(shape, cfg)
+    # the microbatch must not drop below the data-parallel width, or batch
+    # sharding silently degrades (divisibility fallback) and per-chip
+    # activations blow up by the lost factor
+    batch_rule = rules.get("batch") or ()
+    batch_axes = batch_rule if isinstance(batch_rule, tuple) else (batch_rule,)
+    dp = 1
+    for a in batch_axes:
+        dp *= dict(zip(mesh.axis_names, mesh.shape.values())).get(a, 1)
+    if shape.kind == "train":
+        ga = max(1, min(ga, shape.global_batch // max(dp, 1)))
+    model = build_model(cfg, attn_impl=attn_impl, ssd_impl=ssd_impl)
+    meta: dict = {"ga": ga, "rules": {k: str(v) for k, v in rules.items()}}
+
+    with sharding_context(mesh, rules):
+        if shape.kind == "train":
+            state = abstract_train_state(model, opt_cfg)
+            state_sh = make_shardings(
+                train_state_axes(model), mesh, rules=rules, shapes_tree=state
+            )
+            bspecs = input_specs(cfg, shape)
+            bsh = batch_shardings(bspecs, mesh, rules)
+            # bf16 accumulation: halves the grad buffer AND the cross-pod
+            # gradient all-reduce bytes (wire compression); update math is
+            # still fp32 inside the optimizer
+            step = make_train_step(model, opt_cfg, ga=ga, accum_dtype="bfloat16")
+            fn = jax.jit(
+                step,
+                in_shardings=(state_sh, bsh),
+                out_shardings=(state_sh, None),
+                donate_argnums=(0,),
+            )
+            lowered = fn.lower(state, bspecs)
+            meta["state_bytes_global"] = sum(
+                v.size * v.dtype.itemsize for v in jax.tree.leaves(state)
+            )
+
+        elif shape.kind == "prefill":
+            params = model.abstract()
+            params_sh = make_shardings(model.axes(), mesh, rules=rules, shapes_tree=params)
+            bspecs = input_specs(cfg, shape)
+            bsh = batch_shardings(bspecs, mesh, rules)
+            clen = cache_len(cfg, shape)
+            cache_sh = make_shardings(
+                model.cache_axes(), mesh, rules=rules,
+                shapes_tree=model.abstract_cache(shape.global_batch, clen),
+            )
+            fn = jax.jit(
+                lambda p, b: model.prefill(p, b, clen),
+                in_shardings=(params_sh, bsh),
+                out_shardings=(cache_sh, None),
+            )
+            lowered = fn.lower(params, bspecs)
+
+        else:  # decode
+            params = model.abstract()
+            params_sh = make_shardings(model.axes(), mesh, rules=rules, shapes_tree=params)
+            specs = input_specs(cfg, shape)
+            cache = specs["cache"]
+            tokens = specs["tokens"]
+            cache_sh = make_shardings(
+                model.cache_axes(), mesh, rules=rules, shapes_tree=cache
+            )
+            tok_sh = make_shardings(
+                {"tokens": BATCH_AXES["tokens"]}, mesh, rules=rules,
+                shapes_tree={"tokens": tokens},
+            )["tokens"]
+            fn = jax.jit(
+                model.decode_step,
+                in_shardings=(params_sh, cache_sh, tok_sh),
+                out_shardings=(cache_sh, None),
+                donate_argnums=(1,),
+            )
+            lowered = fn.lower(params, cache, tokens)
+            meta["cache_bytes_global"] = sum(
+                v.size * v.dtype.itemsize for v in jax.tree.leaves(cache)
+            )
+
+    return CellPlan(cfg=cfg, shape=shape, mesh=mesh, kind=shape.kind,
+                    lowered=lowered, meta=meta)

@@ -1,0 +1,201 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first — jax locks the device count at first
+init, and the production meshes need 512 placeholder host devices.
+
+Per cell this prints ``compiled.memory_analysis()`` (fits-in-HBM proof) and
+``compiled.cost_analysis()`` (XLA's FLOPs/bytes), runs the trip-count-
+corrected HLO analyzer, derives the three roofline terms, and writes one
+JSON record under ``experiments/dryrun/``. ``--all`` sweeps the full 40-cell
+grid on both meshes (skips recorded explicitly).
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  python -m repro.launch.dryrun --all [--mesh single|multi|both] [--quick]
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+
+def parse_rules(spec: str | None) -> dict:
+    """--rules "embed=none,vocab=model" -> {"embed": None, "vocab": "model"}."""
+    if not spec:
+        return {}
+    out = {}
+    for part in spec.split(","):
+        k, _, v = part.partition("=")
+        if v in ("none", "None", ""):
+            out[k] = None
+        elif "+" in v:
+            out[k] = tuple(v.split("+"))
+        else:
+            out[k] = v
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+             ga: int | None = None, rules_patch: dict | None = None,
+             tag: str = "", pad_heads: str | None = None,
+             remat: str | None = None) -> dict:
+    from repro.analysis.hlo import analyze_hlo
+    from repro.analysis.roofline import HW, model_flops_per_chip, roofline_terms
+    from repro.configs import get_arch, get_shape, cell_supported
+    from repro.launch.builders import lower_cell
+    from repro.launch.mesh import describe_mesh, make_production_mesh
+    from repro.parallel import DEFAULT_RULES
+
+    import dataclasses
+
+    cfg = get_arch(arch)
+    if pad_heads:
+        hq, _, hkv = pad_heads.partition(",")
+        cfg = dataclasses.replace(cfg, num_heads_padded=int(hq),
+                                  num_kv_heads_padded=int(hkv or 0))
+    if remat:
+        cfg = dataclasses.replace(cfg, remat_policy=remat)
+    shape = get_shape(shape_name)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "tag": tag}
+
+    ok, reason = cell_supported(cfg, shape)
+    if not ok:
+        rec["status"] = "skip"
+        rec["reason"] = reason
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: {reason}")
+        out_dir.mkdir(parents=True, exist_ok=True)
+        suffix = f"_{tag}" if tag else ""
+        (out_dir / f"{arch}_{shape_name}_{mesh_name}{suffix}.json").write_text(
+            json.dumps(rec, indent=1))
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    rules = dict(DEFAULT_RULES)
+    if rules_patch:
+        rules.update(rules_patch)
+    try:
+        t0 = time.time()
+        plan = lower_cell(cfg, shape, mesh, rules=rules, ga=ga)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = plan.lowered.compile()
+        t_compile = time.time() - t0
+
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name} "
+              f"(lower {t_lower:.1f}s, compile {t_compile:.1f}s)")
+        print(f"  memory_analysis: {ma}")
+        print(f"  cost_analysis: flops={ca.get('flops', 0):.3e} "
+              f"bytes={ca.get('bytes accessed', 0):.3e}  (while bodies counted once)")
+
+        hlo_text = compiled.as_text()
+        cost = analyze_hlo(hlo_text)
+        mf = model_flops_per_chip(cfg, shape, n_chips)
+        terms = roofline_terms(cost, HW(), model_flops_per_chip=mf)
+
+        arg_b = ma.argument_size_in_bytes
+        tmp_b = ma.temp_size_in_bytes
+        out_b = ma.output_size_in_bytes
+        alias_b = ma.alias_size_in_bytes
+        hbm_need = arg_b + tmp_b + out_b - alias_b
+        fits = hbm_need <= HW().hbm_per_chip
+        print(f"  per-chip bytes: args={arg_b/2**30:.2f}GiB temp={tmp_b/2**30:.2f}GiB "
+              f"out={out_b/2**30:.2f}GiB alias={alias_b/2**30:.2f}GiB "
+              f"-> need {hbm_need/2**30:.2f}GiB / 16GiB {'OK' if fits else 'OVER'}")
+        print(f"  roofline: compute={terms.compute_s*1e3:.2f}ms "
+              f"memory={terms.memory_s*1e3:.2f}ms (xla-fallback {terms.memory_xla_s*1e3:.2f}ms) "
+              f"collective={terms.collective_s*1e3:.2f}ms "
+              f"dominant={terms.dominant} useful={terms.useful_flops_ratio:.2f}")
+
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            memory={
+                "argument_bytes": arg_b,
+                "output_bytes": out_b,
+                "temp_bytes": tmp_b,
+                "alias_bytes": alias_b,
+                "hbm_needed_bytes": hbm_need,
+                "fits_16gib": bool(fits),
+            },
+            xla_cost={
+                "flops_body_once": ca.get("flops", 0.0),
+                "bytes_body_once": ca.get("bytes accessed", 0.0),
+            },
+            analyzer={
+                "flops": cost.flops,
+                "hbm_bytes": cost.hbm_bytes,
+                "collective_bytes": cost.collective_bytes,
+                "collective_count": cost.collective_count,
+                "while_trips": cost.while_trips,
+            },
+            roofline=terms.as_row(),
+            meta=plan.meta,
+        )
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["trace"] = traceback.format_exc()[-3000:]
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name} FAILED: {rec['error']}")
+
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = f"_{tag}" if tag else ""
+    fp = out_dir / f"{arch}_{shape_name}_{mesh_name}{suffix}.json"
+    fp.write_text(json.dumps(rec, indent=1, default=str))
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--ga", type=int, default=None)
+    ap.add_argument("--rules", default=None,
+                    help='rule patches, e.g. "embed=none" (drop FSDP)')
+    ap.add_argument("--pad-heads", default=None,
+                    help='pad head counts, e.g. "48,12" (q,kv)')
+    ap.add_argument("--remat", default=None,
+                    help='override remat policy, e.g. "group8"')
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    from repro.configs import ARCHS, SHAPES  # after XLA_FLAGS
+
+    out_dir = Path(args.out)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    if args.all:
+        cells = [(a, s) for a in ARCHS for s in SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    n_bad = 0
+    t0 = time.time()
+    for arch, shape in cells:
+        for multi in meshes:
+            rec = run_cell(arch, shape, multi, out_dir, ga=args.ga, tag=args.tag,
+                           rules_patch=parse_rules(args.rules),
+                           pad_heads=args.pad_heads, remat=args.remat)
+            if rec["status"] == "error":
+                n_bad += 1
+    print(f"[dryrun] done in {time.time()-t0:.0f}s, {n_bad} failures")
+    return 1 if n_bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,28 @@
+"""Production meshes.
+
+Functions, not module-level constants — importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """Single pod: (data=16, model=16) = 256 chips.
+    Multi-pod:  (pod=2, data=16, model=16) = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh() -> Mesh:
+    """Whatever devices exist locally (tests / examples): 1D data mesh."""
+    n = jax.device_count()
+    return jax.make_mesh((n,), ("data",), axis_types=(AxisType.Auto,))
+
+
+def describe_mesh(mesh: Mesh) -> str:
+    return "x".join(f"{k}={v}" for k, v in mesh.shape.items())

@@ -1,0 +1,123 @@
+"""Serving driver: batched generation behind a bus topic + autoscaler.
+
+Requests land on the ``requests`` topic (Kafka analogue); engine workers
+consume micro-batches, generate with prefill+decode, and publish to
+``responses``. The HPA analogue watches consumer lag and scales workers in
+[min,max]. CPU-runnable with reduced configs:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --reduced \
+      --requests 24
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import time
+from pathlib import Path
+
+import jax
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--workdir", default="experiments/serve_run")
+    args = ap.parse_args()
+
+    from repro.configs import get_arch, reduced
+    from repro.core import ArtifactStore, TopicBus
+    from repro.core.autoscaler import Autoscaler, AutoscalerConfig
+    from repro.core.bus import Consumer
+    from repro.core.events import EventLog
+    from repro.core.registry import ServiceRegistry
+    from repro.models import build_model
+    from repro.serving import GenerationEngine
+    from repro.serving.engine import Request
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    workdir = Path(args.workdir)
+    workdir.mkdir(parents=True, exist_ok=True)
+    bus = TopicBus(workdir / "bus")
+    events = EventLog(bus, workflow=f"serve-{cfg.name}")
+    registry = ServiceRegistry(bus)
+
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    max_len = 64 + args.max_new
+
+    # ---- producer: enqueue requests ----
+    for i in range(args.requests):
+        bus.publish(
+            "requests",
+            {"uid": f"r{i}", "prompt": [1 + (i % 30), 2, 3 + (i % 7)],
+             "max_new_tokens": args.max_new},
+        )
+
+    group = "servers"
+    scaler = Autoscaler(
+        bus, "requests", group,
+        AutoscalerConfig(min_replicas=1, max_replicas=4,
+                         target_lag_per_replica=args.max_batch * 2),
+        events=events,
+    )
+    done: dict[str, list[int]] = {}
+    lock = threading.Lock()
+
+    def worker(wid: int, stop: threading.Event):
+        engine = GenerationEngine(cfg, params, max_len=max_len)
+        registry.register(f"generate", f"pod://server-{wid}", f"server-{wid}")
+        consumer = Consumer(bus, "requests", group)
+        while not stop.is_set():
+            batch: list[Request] = []
+
+            def collect(msg):
+                v = msg.value
+                batch.append(Request(v["uid"], list(v["prompt"]), v["max_new_tokens"]))
+
+            n = consumer.poll(collect, max_msgs=args.max_batch)
+            if not n:
+                if bus.lag("requests", group) == 0:
+                    return
+                time.sleep(0.01)
+                continue
+            results = engine.generate(batch)
+            for r in results:
+                bus.publish("responses", {"uid": r.uid, "tokens": r.tokens})
+                with lock:
+                    done[r.uid] = r.tokens
+
+    threads: list[threading.Thread] = []
+    stop = threading.Event()
+    t0 = time.time()
+    desired, _ = scaler.observe()
+    while len(done) < args.requests and time.time() - t0 < 600:
+        desired, changed = scaler.observe()
+        while len([t for t in threads if t.is_alive()]) < desired:
+            wid = len(threads)
+            t = threading.Thread(target=worker, args=(wid, stop), daemon=True)
+            t.start()
+            threads.append(t)
+        time.sleep(0.05)
+    stop.set()
+    for t in threads:
+        t.join(timeout=5)
+
+    wall = time.time() - t0
+    print(f"served {len(done)}/{args.requests} requests in {wall:.1f}s "
+          f"({len(done)*args.max_new/wall:.1f} tok/s), peak workers={len(threads)}")
+    autoscales = events.history("autoscale")
+    print("autoscale events:", [(e["old"], e["new"]) for e in autoscales])
+    assert len(done) == args.requests
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

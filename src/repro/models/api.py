@@ -1,0 +1,101 @@
+"""Unified model facade: one object per architecture with a stable surface
+used by the trainer, server, dry-run, and tests.
+
+    model = build_model(cfg)
+    params = model.init(key)            # real arrays
+    aparams = model.abstract()          # ShapeDtypeStructs (dry-run)
+    axes    = model.axes()              # logical-axis tuples (sharding)
+    loss, metrics = model.loss_fn(params, batch)
+    cache, logits = model.prefill(params, batch, max_len)
+    cache, logits = model.decode_step(params, cache, tokens)
+    specs  = model.input_specs(shape)   # dry-run inputs per shape cell
+    batch  = model.make_batch(seed, shape)  # real synthetic batch (smoke)
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.encdec import EncDecLM
+from repro.models.lm import DecoderLM
+
+Model = Any  # DecoderLM | EncDecLM
+
+
+def build_model(cfg: ModelConfig, **kw) -> Model:
+    if cfg.is_encoder_decoder:
+        return EncDecLM(cfg, **kw)
+    return DecoderLM(cfg, **kw)
+
+
+# ---------------------------------------------------------------------------
+# inputs: abstract specs (dry-run) and synthetic batches (smoke tests)
+# ---------------------------------------------------------------------------
+
+# logical axes of each batch field
+BATCH_AXES = {
+    "tokens": ("batch", "seq"),
+    "targets": ("batch", "seq"),
+    "vision_embeds": ("batch", "seq", None),
+    "frames": ("batch", "seq", None),
+}
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "targets": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        specs["vision_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_frontend_tokens, cfg.d_model), dt
+        )
+    if cfg.is_encoder_decoder:
+        specs["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), dt)
+    return specs
+
+
+def cache_len(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """Total context length: VLM carries its vision prefix in the cache."""
+    return shape.seq_len + (cfg.num_frontend_tokens if cfg.family == "vlm" else 0)
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Inputs for one decode step: tokens + the cache as an argument."""
+    b = shape.global_batch
+    model = build_model(cfg)
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "cache": model.abstract_cache(b, cache_len(cfg, shape)),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    if shape.kind in ("train", "prefill"):
+        return train_input_specs(cfg, shape)
+    return decode_input_specs(cfg, shape)
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeConfig, seed: int = 0) -> dict:
+    """Real synthetic batch for smoke tests / examples (reduced configs)."""
+    rng = np.random.default_rng(seed)
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32),
+        "targets": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = jnp.asarray(
+            rng.standard_normal((b, cfg.num_frontend_tokens, cfg.d_model)), dt
+        )
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jnp.asarray(rng.standard_normal((b, s, cfg.d_model)), dt)
+    return batch

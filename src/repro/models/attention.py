@@ -1,0 +1,168 @@
+"""Attention blocks: GQA + RoPE (+ optional qk-norm), train/prefill/decode paths.
+
+Sharding: q heads -> "model" (when divisible), kv heads -> "model" (usually
+replicated since kv_heads < 16), decode KV cache seq -> "model"
+(flash-decoding-style sequence parallelism; see DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import common
+from repro.models.common import ParamSpec, apply_rope, rms_norm, rope_table
+from repro.parallel import constrain
+
+NEG_INF = -1e30
+
+
+def attn_param_specs(cfg: ModelConfig, stacked: int | None = None) -> dict:
+    """QKV/O projections (+ qk-norm scales). ``stacked``: leading scan dim.
+
+    Uses the *effective* (possibly padded) head counts; padded o-proj rows
+    are zero-init so padding is output-identical at init.
+    """
+    d, h, kvh, hd = cfg.d_model, cfg.eff_heads, cfg.eff_kv_heads, cfg.head_dim
+    pre = (stacked,) if stacked else ()
+    pax = ("stack",) if stacked else ()
+    wo_init = "zeros" if cfg.num_heads_padded else "normal"
+    specs = {
+        "wq": ParamSpec(pre + (d, h, hd), pax + ("embed", "heads", "head_dim")),
+        "wk": ParamSpec(pre + (d, kvh, hd), pax + ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec(pre + (d, kvh, hd), pax + ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec(pre + (h, hd, d), pax + ("heads", "head_dim", "embed"),
+                        init=wo_init),
+    }
+    if cfg.qk_norm:
+        specs["q_norm"] = ParamSpec(pre + (hd,), pax + (None,), init="ones")
+        specs["k_norm"] = ParamSpec(pre + (hd,), pax + (None,), init="ones")
+    return specs
+
+
+def _project_qkv(p, x, cfg: ModelConfig, positions: jax.Array | None, rope: bool):
+    """x (B,S,D) -> q (B,S,H,Dh), k/v (B,S,KVH,Dh), rope-rotated."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = constrain(q, "batch", "seq", "heads", "head_dim")
+    k = constrain(k, "batch", "seq", "kv_heads", "head_dim")
+    v = constrain(v, "batch", "seq", "kv_heads", "head_dim")
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if rope:
+        assert positions is not None
+        cos, sin = rope_table(positions, cfg.head_dim, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def self_attention(
+    p: dict,
+    x: jax.Array,           # (B, S, D)
+    cfg: ModelConfig,
+    *,
+    causal: bool = True,
+    rope: bool = True,
+    positions: jax.Array | None = None,  # (S,) int32
+    attn_impl: str = "xla_chunked",
+) -> jax.Array:
+    """Full-sequence self-attention (train / prefill)."""
+    if positions is None:
+        positions = jnp.arange(x.shape[1])
+    q, k, v = _project_qkv(p, x, cfg, positions, rope)
+    out = ops.flash_attention(q, k, v, causal=causal, impl=attn_impl)
+    out = constrain(out, "batch", "seq", "heads", "head_dim")
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def self_attention_with_cache_write(
+    p, x, cfg: ModelConfig, *, positions=None, attn_impl="xla_chunked",
+    rope: bool = True,
+):
+    """Prefill: attention output AND the K/V to seed the cache."""
+    if positions is None:
+        positions = jnp.arange(x.shape[1])
+    q, k, v = _project_qkv(p, x, cfg, positions, rope=rope)
+    out = ops.flash_attention(q, k, v, causal=True, impl=attn_impl)
+    out = constrain(out, "batch", "seq", "heads", "head_dim")
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), (k, v)
+
+
+def decode_attention_raw(
+    q: jax.Array,        # (B, 1, H, Dh)
+    k_cache: jax.Array,  # (B, Smax, KVH, Dh)
+    v_cache: jax.Array,
+    cache_len: jax.Array,  # scalar int32: number of valid positions (incl. current)
+    scale: float,
+) -> jax.Array:
+    """One-token attention over a (possibly seq-sharded) KV cache."""
+    b, _, h, hd = q.shape
+    smax, kvh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, hd).astype(jnp.float32) * scale
+    scores = jnp.einsum(
+        "bkgd,bskd->bkgs", qg, k_cache.astype(jnp.float32)
+    )  # (B, KVH, G, Smax)
+    valid = jnp.arange(smax)[None, None, None, :] < cache_len
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, hd)
+
+
+def decode_self_attention(
+    p: dict,
+    x: jax.Array,          # (B, 1, D)
+    layer_cache: dict,     # {"k": (B,Smax,KVH,Dh), "v": ...}
+    pos: jax.Array,        # scalar int32: index of the current token
+    cfg: ModelConfig,
+    *,
+    rope: bool = True,
+) -> tuple[jax.Array, dict]:
+    positions = pos[None] if pos.ndim == 0 else pos
+    q, k, v = _project_qkv(p, x, cfg, positions, rope)
+    kc = jax.lax.dynamic_update_slice(layer_cache["k"], k.astype(layer_cache["k"].dtype), (0, pos, 0, 0))
+    vc = jax.lax.dynamic_update_slice(layer_cache["v"], v.astype(layer_cache["v"].dtype), (0, pos, 0, 0))
+    kc = constrain(kc, "cache_batch", "cache_seq", "kv_heads", "head_dim")
+    vc = constrain(vc, "cache_batch", "cache_seq", "kv_heads", "head_dim")
+    out = decode_attention_raw(q, kc, vc, pos + 1, cfg.head_dim ** -0.5)
+    out = out.astype(x.dtype)
+    o = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return o, {"k": kc, "v": vc}
+
+
+def cross_attention(
+    p: dict,
+    x: jax.Array,          # (B, Sq, D) decoder states
+    kv: tuple[jax.Array, jax.Array] | None,  # precomputed enc (k, v)
+    cfg: ModelConfig,
+    *,
+    attn_impl: str = "xla_chunked",
+) -> jax.Array:
+    """Encoder-decoder cross attention (no rope, non-causal)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k, v = kv
+    out = ops.flash_attention(q, k, v, causal=False, impl=attn_impl)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def cross_attention_kv(p: dict, enc: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Precompute cross-attention K/V from encoder output (B, Senc, D)."""
+    k = jnp.einsum("bsd,dhk->bshk", enc, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc, p["wv"])
+    return k, v
+
+
+def decode_cross_attention(p, x, kv, cfg: ModelConfig):
+    """One-token cross attention over full precomputed encoder K/V."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k, v = kv
+    out = decode_attention_raw(
+        q, k, v, jnp.asarray(k.shape[1], jnp.int32), cfg.head_dim ** -0.5
+    ).astype(x.dtype)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])

@@ -1,0 +1,143 @@
+"""Shared model building blocks: declarative params, norms, RoPE.
+
+Params are plain pytrees (nested dicts of arrays). Each model defines a
+``param_specs(cfg)`` tree of :class:`ParamSpec`; from it we derive
+
+* ``init_params``    — real arrays (deterministic per-path RNG folding),
+* ``abstract_params``— ShapeDtypeStructs (dry-run: no allocation),
+* ``param_axes``     — logical-axis tuples (sharding).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"  # normal | zeros | ones | embed
+    scale: float | None = None
+    dtype: str | None = None  # None -> model default
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _leaf_dtype(spec: ParamSpec, default: str):
+    return jnp.dtype(spec.dtype or default)
+
+
+def init_params(specs: Any, key: jax.Array, default_dtype: str) -> Any:
+    """Materialize a ParamSpec tree into real arrays.
+
+    RNG is folded per tree-path so adding a parameter never reshuffles the
+    others (checkpoint/elastic stability).
+    """
+    leaves = jax.tree.leaves_with_path(specs, is_leaf=_is_spec)
+
+    def one(path, spec: ParamSpec):
+        dt = _leaf_dtype(spec, default_dtype)
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, dt)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, dt)
+        # deterministic across processes (hash() is PYTHONHASHSEED-random)
+        seed = zlib.crc32(jax.tree_util.keystr(path).encode()) % (2**31)
+        k = jax.random.fold_in(key, seed)
+        if spec.init == "embed":
+            scale = spec.scale if spec.scale is not None else 1.0
+        else:
+            fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+            scale = spec.scale if spec.scale is not None else 1.0 / np.sqrt(fan_in)
+        return (jax.random.normal(k, spec.shape, jnp.float32) * scale).astype(dt)
+
+    vals = [one(p, s) for p, s in leaves]
+    return jax.tree.unflatten(jax.tree.structure(specs, is_leaf=_is_spec), vals)
+
+
+def abstract_params(specs: Any, default_dtype: str) -> Any:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, _leaf_dtype(s, default_dtype)),
+        specs,
+        is_leaf=_is_spec,
+    )
+
+
+def param_axes(specs: Any) -> Any:
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=_is_spec)
+
+
+def param_bytes(specs: Any, default_dtype: str) -> int:
+    return sum(
+        int(np.prod(s.shape)) * _leaf_dtype(s, default_dtype).itemsize
+        for s in jax.tree.leaves(specs, is_leaf=_is_spec)
+    )
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, weight, bias, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def rope_table(positions: jax.Array, head_dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """cos/sin tables for given integer positions. Shapes (..., head_dim//2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, D); cos/sin: (B, S, D/2) or (S, D/2) (broadcast over heads)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:  # (S, half)
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:  # (B, S, half)
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dt)
+
+
+def swiglu(x, w_gate, w_up, w_down, constrain=None):
+    """SwiGLU MLP. Weights: (D,F), (D,F), (F,D)."""
+    g = jnp.einsum("bsd,df->bsf", x, w_gate)
+    u = jnp.einsum("bsd,df->bsf", x, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    if constrain is not None:
+        h = constrain(h, "batch", "seq", "ff")
+    return jnp.einsum("bsf,fd->bsd", h, w_down)

@@ -1,0 +1,237 @@
+"""Encoder-decoder LM (Whisper backbone). Conv frontend is a STUB per the
+assignment: the batch provides precomputed (B, frames, d_model) embeddings.
+
+Deviations noted in DESIGN.md: sinusoidal (non-learned) position encodings on
+both stacks (Whisper uses learned on the decoder) so parameters stay
+independent of sequence length; RMSNorm instead of LayerNorm+bias for
+consistency with the rest of the zoo.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.common import (
+    ParamSpec,
+    abstract_params,
+    init_params,
+    param_axes,
+    rms_norm,
+    swiglu,
+)
+from repro.models.lm import chunked_cross_entropy, mlp_param_specs, padded_vocab
+from repro.parallel import constrain
+
+
+def sinusoidal(positions: jax.Array, d: int) -> jax.Array:
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig, *, attn_impl: str = "xla_chunked", **_):
+        assert cfg.is_encoder_decoder
+        self.cfg = cfg
+        self.attn_impl = attn_impl
+
+    # ------------------------------------------------------------------
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        L, D = cfg.num_layers, cfg.d_model
+        vp = padded_vocab(cfg)
+        enc_layer = {
+            "ln1": ParamSpec((L, D), ("stack", None), init="ones"),
+            "attn": attn.attn_param_specs(cfg, stacked=L),
+            "ln2": ParamSpec((L, D), ("stack", None), init="ones"),
+            "mlp": mlp_param_specs(cfg, stacked=L),
+        }
+        dec_layer = {
+            "ln1": ParamSpec((L, D), ("stack", None), init="ones"),
+            "attn": attn.attn_param_specs(cfg, stacked=L),
+            "ln_x": ParamSpec((L, D), ("stack", None), init="ones"),
+            "xattn": attn.attn_param_specs(cfg, stacked=L),
+            "ln2": ParamSpec((L, D), ("stack", None), init="ones"),
+            "mlp": mlp_param_specs(cfg, stacked=L),
+        }
+        return {
+            "embed": ParamSpec((vp, D), ("vocab", None), init="embed", scale=0.02),
+            "unembed": ParamSpec((D, vp), (None, "vocab")),
+            "enc_norm": ParamSpec((D,), (None,), init="ones"),
+            "final_norm": ParamSpec((D,), (None,), init="ones"),
+            "encoder": enc_layer,
+            "decoder": dec_layer,
+        }
+
+    def init(self, key):
+        return init_params(self.param_specs(), key, self.cfg.dtype)
+
+    def abstract(self):
+        return abstract_params(self.param_specs(), self.cfg.dtype)
+
+    def axes(self):
+        return param_axes(self.param_specs())
+
+    # ------------------------------------------------------------------
+    def encode(self, params, frames: jax.Array) -> jax.Array:
+        """frames (B, Senc, D) precomputed embeddings -> encoder states."""
+        cfg = self.cfg
+        pos = sinusoidal(jnp.arange(frames.shape[1]), cfg.d_model)
+        x = frames.astype(jnp.dtype(cfg.dtype)) + pos[None].astype(jnp.dtype(cfg.dtype))
+        x = constrain(x, "batch", "seq", None)
+
+        def body(x, pl):
+            h = rms_norm(x, pl["ln1"], cfg.norm_eps)
+            h = attn.self_attention(
+                pl["attn"], h, cfg, causal=False, rope=False, attn_impl=self.attn_impl
+            )
+            x = x + h
+            h = rms_norm(x, pl["ln2"], cfg.norm_eps)
+            h = swiglu(h, pl["mlp"]["w_gate"], pl["mlp"]["w_up"], pl["mlp"]["w_down"])
+            return constrain(x + h, "batch", "seq", None), ()
+
+        x, _ = jax.lax.scan(body, x, params["encoder"])
+        return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+    def _decode_stack_train(self, params, x, enc):
+        cfg = self.cfg
+
+        def body(x, pl):
+            h = rms_norm(x, pl["ln1"], cfg.norm_eps)
+            h = attn.self_attention(
+                pl["attn"], h, cfg, causal=True, rope=False, attn_impl=self.attn_impl
+            )
+            x = x + h
+            h = rms_norm(x, pl["ln_x"], cfg.norm_eps)
+            kv = attn.cross_attention_kv(pl["xattn"], enc)
+            h = attn.cross_attention(pl["xattn"], h, kv, cfg, attn_impl=self.attn_impl)
+            x = x + h
+            h = rms_norm(x, pl["ln2"], cfg.norm_eps)
+            h = swiglu(h, pl["mlp"]["w_gate"], pl["mlp"]["w_up"], pl["mlp"]["w_down"])
+            return constrain(x + h, "batch", "seq", None), ()
+
+        x, _ = jax.lax.scan(body, x, params["decoder"])
+        return x
+
+    def _embed_tokens(self, params, tokens):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0)
+        pos = sinusoidal(jnp.arange(tokens.shape[1]), cfg.d_model)
+        return x + pos[None].astype(x.dtype)
+
+    def loss_fn(self, params, batch):
+        cfg = self.cfg
+        enc = self.encode(params, batch["frames"])
+        x = self._embed_tokens(params, batch["tokens"])
+        x = self._decode_stack_train(params, x, enc)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        ce = chunked_cross_entropy(x, params["unembed"], batch["targets"], cfg.vocab_size)
+        return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32)}
+
+    # ------------------------------------------------------------------
+    # serving: cache = decoder self-KV + precomputed cross-KV
+    # ------------------------------------------------------------------
+    def cache_struct(self, batch: int, max_len: int, abstract: bool):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        L = cfg.num_layers
+
+        def arr(shape, dtype):
+            return jax.ShapeDtypeStruct(shape, dtype) if abstract else jnp.zeros(shape, dtype)
+
+        kv = (L, batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+        return {
+            "k": arr(kv, dt),
+            "v": arr(kv, dt),
+            "xk": arr(kv, dt),
+            "xv": arr(kv, dt),
+            "pos": arr((), jnp.int32),
+        }
+
+    def init_cache(self, batch, max_len):
+        return self.cache_struct(batch, max_len, abstract=False)
+
+    def abstract_cache(self, batch, max_len):
+        return self.cache_struct(batch, max_len, abstract=True)
+
+    def cache_axes(self):
+        kv = ("stack", "cache_batch", "cache_seq", "kv_heads", "head_dim")
+        return {"k": kv, "v": kv, "xk": kv, "xv": kv, "pos": None}
+
+    def prefill(self, params, batch, max_len: int):
+        """Encode frames, prefill decoder with the given tokens."""
+        cfg = self.cfg
+        enc = self.encode(params, batch["frames"])
+        x = self._embed_tokens(params, batch["tokens"])
+        b, s, _ = x.shape
+        pad = max_len - s
+
+        def pad_kv(k):
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            return constrain(k, "cache_batch", "cache_seq", "kv_heads", "head_dim")
+
+        def pad_xkv(k):
+            p = max_len - k.shape[1]
+            k = jnp.pad(k, ((0, 0), (0, p), (0, 0), (0, 0)))
+            return constrain(k, "cache_batch", "cache_seq", "kv_heads", "head_dim")
+
+        def body(x, pl):
+            h = rms_norm(x, pl["ln1"], cfg.norm_eps)
+            h, (k, v) = attn.self_attention_with_cache_write(
+                pl["attn"], h, cfg, attn_impl=self.attn_impl, rope=False
+            )
+            x = x + h
+            h = rms_norm(x, pl["ln_x"], cfg.norm_eps)
+            xkv = attn.cross_attention_kv(pl["xattn"], enc)
+            h = attn.cross_attention(pl["xattn"], h, xkv, cfg, attn_impl=self.attn_impl)
+            x = x + h
+            h = rms_norm(x, pl["ln2"], cfg.norm_eps)
+            h = swiglu(h, pl["mlp"]["w_gate"], pl["mlp"]["w_up"], pl["mlp"]["w_down"])
+            return x + h, {
+                "k": pad_kv(k), "v": pad_kv(v),
+                "xk": pad_xkv(xkv[0]), "xv": pad_xkv(xkv[1]),
+            }
+
+        x, kv = jax.lax.scan(body, x, params["decoder"])
+        cache = {**kv, "pos": jnp.asarray(s, jnp.int32)}
+        x = rms_norm(x[:, -1:, :], params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum(
+            "bsd,dv->bsv", x, params["unembed"], preferred_element_type=jnp.float32
+        )[:, 0]
+        return cache, logits
+
+    def decode_step(self, params, cache, tokens):
+        """One decoder token. NOTE rope=False family: positions via sinusoid."""
+        cfg = self.cfg
+        pos = cache["pos"]
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x = x + sinusoidal(pos[None], cfg.d_model)[None].astype(x.dtype)
+
+        def body(x, inp):
+            pl, cl = inp
+            h = rms_norm(x, pl["ln1"], cfg.norm_eps)
+            h, new_kv = attn.decode_self_attention(
+                pl["attn"], h, {"k": cl["k"], "v": cl["v"]}, pos, cfg, rope=False
+            )
+            x = x + h
+            h = rms_norm(x, pl["ln_x"], cfg.norm_eps)
+            h = attn.decode_cross_attention(pl["xattn"], h, (cl["xk"], cl["xv"]), cfg)
+            x = x + h
+            h = rms_norm(x, pl["ln2"], cfg.norm_eps)
+            h = swiglu(h, pl["mlp"]["w_gate"], pl["mlp"]["w_up"], pl["mlp"]["w_down"])
+            return x + h, {**new_kv, "xk": cl["xk"], "xv": cl["xv"]}
+
+        layer_caches = {k: cache[k] for k in ("k", "v", "xk", "xv")}
+        x, kv = jax.lax.scan(body, x, (params["decoder"], layer_caches))
+        new_cache = {**kv, "pos": pos + 1}
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum(
+            "bsd,dv->bsv", x, params["unembed"], preferred_element_type=jnp.float32
+        )[:, 0]
+        return new_cache, logits

@@ -1,0 +1,137 @@
+"""Mixture-of-Experts block: top-k routing, per-example capacity dispatch.
+
+Dispatch strategy (TPU/SPMD-native): tokens are grouped **per example** (the
+batch dim is the data-parallel axis), so dispatch/combine are local scatters/
+gathers within each data shard — no cross-shard scatter traffic. Expert FFN
+weights (E, D, F) are sharded D->FSDP("embed"), F->TP("ff"): every chip holds
+a slice of *every* expert, so no all-to-all is required at all (a deliberate
+departure from GShard-style EP; see DESIGN.md and the EP-vs-TP perf note).
+
+Decode path (S==1): dense dispatch over experts with one-hot gates — at
+batch x 1 token the step is HBM-bound on expert weights either way.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamSpec
+from repro.parallel import constrain
+
+
+def moe_param_specs(cfg: ModelConfig, stacked: int | None = None) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    pre = (stacked,) if stacked else ()
+    pax = ("stack",) if stacked else ()
+    return {
+        "router": ParamSpec(pre + (d, e), pax + ("embed", None)),
+        "w_gate": ParamSpec(pre + (e, d, f), pax + ("experts", "embed", "ff")),
+        "w_up": ParamSpec(pre + (e, d, f), pax + ("experts", "embed", "ff")),
+        "w_down": ParamSpec(pre + (e, f, d), pax + ("experts", "ff", "embed")),
+    }
+
+
+def capacity(cfg: ModelConfig, seq_len: int) -> int:
+    c = math.ceil(seq_len * cfg.experts_per_token * cfg.capacity_factor / cfg.num_experts)
+    return max(cfg.experts_per_token, min(c, seq_len))
+
+
+def route(p, x, cfg: ModelConfig):
+    """Router logits -> (gates (B,S,k), idx (B,S,k), aux_loss scalar)."""
+    logits = jnp.einsum("bsd,de->bse", x, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.experts_per_token)
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    # Switch-style load balancing loss
+    e = cfg.num_experts
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(idx[..., 0], e, dtype=jnp.float32), axis=(0, 1)
+    )
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+    return gates, idx, aux
+
+
+def _expert_ffn(p, x_exp):
+    """x_exp (B, E, C, D) -> (B, E, C, D); SwiGLU per expert."""
+    g = jnp.einsum("becd,edf->becf", x_exp, p["w_gate"])
+    u = jnp.einsum("becd,edf->becf", x_exp, p["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x_exp.dtype) * u
+    h = constrain(h, "batch", "experts", "expert_capacity", "ff")
+    return jnp.einsum("becf,efd->becd", h, p["w_down"])
+
+
+MOE_SEQ_CHUNK = 4096  # dispatch-buffer bound: B x k x chunk x cf x D
+
+
+def moe_block(p, x, cfg: ModelConfig) -> tuple[jax.Array, jax.Array]:
+    """x (B,S,D) -> (y, aux_loss). Long sequences are dispatched in seq
+    chunks so the (B,E,C,D) buffers stay ~2 x chunk x k x cf x D bytes per
+    example instead of scaling with the full 32k+ sequence."""
+    b, s, d = x.shape
+    if s > MOE_SEQ_CHUNK:
+        nc = s // MOE_SEQ_CHUNK
+        assert s % MOE_SEQ_CHUNK == 0, (s, MOE_SEQ_CHUNK)
+        xc = jnp.moveaxis(x.reshape(b, nc, MOE_SEQ_CHUNK, d), 1, 0)
+
+        def body(aux_sum, x_chunk):
+            y_chunk, aux = _moe_block_chunk(p, x_chunk, cfg)
+            return aux_sum + aux, y_chunk
+
+        aux_total, yc = jax.lax.scan(body, jnp.zeros((), jnp.float32), xc)
+        y = jnp.moveaxis(yc, 0, 1).reshape(b, s, d)
+        return y, aux_total / nc
+    return _moe_block_chunk(p, x, cfg)
+
+
+def _moe_block_chunk(p, x, cfg: ModelConfig) -> tuple[jax.Array, jax.Array]:
+    b, s, d = x.shape
+    k, e = cfg.experts_per_token, cfg.num_experts
+    gates, idx, aux = route(p, x, cfg)
+
+    if s == 1:
+        # decode: dense one-hot combine (HBM-bound on weights regardless)
+        onehot = jnp.sum(
+            jax.nn.one_hot(idx, e, dtype=jnp.float32) * gates[..., None], axis=2
+        )  # (B, 1, E)
+        xe = jnp.broadcast_to(x[:, None, :, :], (b, e, 1, d))  # (B,E,1,D)
+        ye = _expert_ffn(p, xe)  # (B,E,1,D)
+        y = jnp.einsum("beqd,bqe->bqd", ye.astype(jnp.float32), onehot)
+        return y.astype(x.dtype), aux
+
+    cap = capacity(cfg, s)
+    # position of each (s, k) assignment within its expert's capacity buffer,
+    # computed per example in token order
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)          # (B,S,k,E)
+    flat = onehot.reshape(b, s * k, e)
+    pos_in_expert = jnp.cumsum(flat, axis=1) - 1               # (B,S*k,E)
+    pos = jnp.sum(pos_in_expert * flat, axis=-1).reshape(b, s, k)  # (B,S,k)
+    keep = pos < cap                                            # (B,S,k)
+
+    # ---- dispatch: scatter tokens into (E, C) buffers, per example ----
+    def dispatch_one(xb, idxb, posb, keepb):
+        # xb (S,D); idxb/posb/keepb (S,k)
+        buf = jnp.zeros((e, cap, d), xb.dtype)
+        xs = jnp.repeat(xb, k, axis=0)                          # (S*k, D)
+        ei = idxb.reshape(-1)
+        pi = jnp.where(keepb.reshape(-1), posb.reshape(-1), cap)  # dropped -> OOB
+        return buf.at[ei, pi].add(xs, mode="drop")
+
+    x_exp = jax.vmap(dispatch_one)(x, idx, pos, keep)           # (B,E,C,D)
+    x_exp = constrain(x_exp, "batch", "experts", "expert_capacity", "embed_tp")
+
+    y_exp = _expert_ffn(p, x_exp)                               # (B,E,C,D)
+
+    # ---- combine: gather back and weight by gates ----
+    def combine_one(yb, idxb, posb, keepb, gb):
+        pi = jnp.where(keepb, posb, 0)
+        got = yb[idxb.reshape(-1), pi.reshape(-1)].reshape(s, k, d)
+        w = (gb * keepb).astype(jnp.float32)[..., None]
+        return jnp.sum(got.astype(jnp.float32) * w, axis=1)
+
+    y = jax.vmap(combine_one)(y_exp, idx, pos, keep, gates)
+    return y.astype(x.dtype), aux

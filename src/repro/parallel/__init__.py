@@ -1,0 +1,19 @@
+from repro.parallel.axes import (
+    DEFAULT_RULES,
+    constrain,
+    logical_to_spec,
+    make_shardings,
+    sharding_context,
+    current_mesh,
+    current_rules,
+)
+
+__all__ = [
+    "DEFAULT_RULES",
+    "constrain",
+    "logical_to_spec",
+    "make_shardings",
+    "sharding_context",
+    "current_mesh",
+    "current_rules",
+]

@@ -1,0 +1,176 @@
+"""Logical-axis sharding (MaxText-style rules).
+
+Model code annotates tensors with *logical* axis names ("batch", "embed",
+"heads", ...). A rule table maps logical names to mesh axes. The same model
+code therefore runs unsharded on one CPU device (smoke tests), on the
+single-pod 16x16 mesh, and on the 2x16x16 multi-pod mesh — only the rules and
+the mesh change.
+
+Design notes
+------------
+* ``sharding_context`` is a thread-local context manager; ``constrain`` is a
+  no-op outside of it so model code never needs a mesh to run.
+* Rules map a logical name to a mesh axis, a tuple of mesh axes (a logical
+  dim sharded over several physical axes, e.g. batch over (pod, data)), or
+  ``None`` (replicated).
+* Unknown logical names are replicated — a deliberate fail-soft so new model
+  code works before its rule is tuned (the roofline pass catches the cost).
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Any, Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# The production rule table (see DESIGN.md "Distribution design").
+# batch        -> fully data-parallel over both pod and data axes
+# embed        -> FSDP (ZeRO-3): weight dims sharded over the data axes
+# heads/ff/... -> tensor parallel over the model axis
+# experts      -> expert parallel over the model axis
+DEFAULT_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": ("pod", "data"),      # FSDP shard dim of weights
+    "embed_tp": "model",           # activation d_model dim when TP-sharding acts
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ff": "model",
+    "experts": "model",
+    "expert_capacity": None,
+    "ssm_heads": "model",
+    "ssm_state": None,
+    "conv": None,
+    "stack": None,                 # scan-stacked layer dim, never sharded
+    "cache_batch": ("pod", "data"),
+    # flash-decoding-style sequence parallelism: the KV cache shards over
+    # "model" on its seq dim (kv_heads rarely divide the model axis); the
+    # softmax over sharded seq costs only tiny max/sum all-reduces
+    "cache_seq": "model",
+}
+
+_CTX = threading.local()
+
+
+def _get(name: str, default=None):
+    return getattr(_CTX, name, default)
+
+
+@contextmanager
+def sharding_context(mesh: Mesh | None, rules: Mapping[str, Any] | None = None):
+    """Activate (mesh, rules) for ``constrain`` within model code."""
+    prev_mesh, prev_rules = _get("mesh"), _get("rules")
+    _CTX.mesh = mesh
+    _CTX.rules = dict(rules) if rules is not None else dict(DEFAULT_RULES)
+    try:
+        yield
+    finally:
+        _CTX.mesh = prev_mesh
+        _CTX.rules = prev_rules
+
+
+def current_mesh() -> Mesh | None:
+    return _get("mesh")
+
+
+def current_rules() -> dict[str, Any]:
+    r = _get("rules")
+    return dict(r) if r is not None else dict(DEFAULT_RULES)
+
+
+def logical_to_spec(
+    logical_axes: Sequence[str | None],
+    rules: Mapping[str, Any] | None = None,
+    mesh: Mesh | None = None,
+    dim_sizes: Sequence[int] | None = None,
+) -> P:
+    """Map a tuple of logical axis names to a PartitionSpec.
+
+    * Drops mesh axes that do not exist on ``mesh`` (so the same rules work
+      for the 2D single-pod mesh, the 3D multi-pod mesh, and a 1-device test
+      mesh).
+    * Never assigns one mesh axis to two tensor dims.
+    * If ``dim_sizes`` is given, drops mesh axes that do not divide the dim
+      evenly (e.g. kv_heads=8 cannot shard over model=16 -> replicated).
+      For multi-axis entries it keeps the longest divisible prefix, so
+      batch=32 over ("pod","data")=(2,16) shards fully while batch=1 falls
+      back to replicated instead of erroring.
+    """
+    rules = rules if rules is not None else (_get("rules") or DEFAULT_RULES)
+    mesh = mesh if mesh is not None else _get("mesh")
+    mesh_axes = set(mesh.axis_names) if mesh is not None else None
+    axis_size = dict(zip(mesh.axis_names, mesh.shape.values())) if mesh is not None else {}
+    used: set[str] = set()
+    out = []
+    for i, name in enumerate(logical_axes):
+        entry = rules.get(name) if name is not None else None
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        axes = tuple(
+            a for a in axes
+            if (mesh_axes is None or a in mesh_axes) and a not in used
+        )
+        if dim_sizes is not None and mesh is not None and axes:
+            dim = dim_sizes[i]
+            kept: list[str] = []
+            prod = 1
+            for a in axes:
+                if dim % (prod * axis_size[a]) == 0:
+                    kept.append(a)
+                    prod *= axis_size[a]
+                else:
+                    break
+            axes = tuple(kept)
+        used.update(axes)
+        if not axes:
+            out.append(None)
+        elif len(axes) == 1:
+            out.append(axes[0])
+        else:
+            out.append(axes)
+    return P(*out)
+
+
+def constrain(x: jax.Array, *logical_axes: str | None) -> jax.Array:
+    """with_sharding_constraint under the ambient (mesh, rules); no-op outside."""
+    mesh = _get("mesh")
+    if mesh is None:
+        return x
+    spec = logical_to_spec(logical_axes, mesh=mesh, dim_sizes=x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def make_shardings(
+    axes_tree: Any,
+    mesh: Mesh,
+    rules: Mapping[str, Any] | None = None,
+    shapes_tree: Any = None,
+):
+    """Map a pytree of logical-axes tuples to a pytree of NamedShardings.
+
+    ``shapes_tree`` (same structure, leaves = shape tuples or arrays /
+    ShapeDtypeStructs) enables divisibility-aware dropping.
+    """
+    rules = rules if rules is not None else DEFAULT_RULES
+    is_leaf = lambda v: v is None or (
+        isinstance(v, tuple) and all(isinstance(e, (str, type(None))) for e in v)
+    )
+
+    def one(axes, shape=None):
+        if axes is None:
+            return NamedSharding(mesh, P())
+        dims = getattr(shape, "shape", shape)
+        return NamedSharding(
+            mesh, logical_to_spec(axes, rules=rules, mesh=mesh, dim_sizes=dims)
+        )
+
+    if shapes_tree is None:
+        return jax.tree.map(one, axes_tree, is_leaf=is_leaf)
+    return jax.tree.map(one, axes_tree, shapes_tree, is_leaf=is_leaf)

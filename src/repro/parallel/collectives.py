@@ -1,0 +1,108 @@
+"""Explicit collectives via shard_map: compressed gradient all-reduce.
+
+GSPMD inserts collectives implicitly everywhere else in this repo; this
+module is the one place we drop to ``jax.shard_map`` for a collective the
+compiler cannot synthesize: **error-feedback int8-compressed gradient
+all-reduce** (1-bit-Adam-family trick, here at 8 bits).
+
+    g_compressed = quantize_int8(g + error_carry)
+    all-reduce(g_compressed)            # 4x fewer wire bytes than fp32
+    error_carry = (g + error_carry) - dequant(g_compressed)
+
+The error carry makes the quantization *unbiased over time* — the residual
+of step t is re-injected at t+1, so long-run drift vanishes (standard error
+feedback / EF-SGD result). Used for the cross-pod (DCN-ish) reduction where
+wire bytes hurt most; the carry lives in the train state.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """int8-compressed psum: quantize locally, sum int32, dequant.
+
+    Wire bytes: 1 byte/elt for the payload (+1 scalar) vs 4 for fp32.
+    Scales are max-combined so dequantization is conservative (no overflow:
+    the int32 accumulator holds up to 2^23 shards of int8 exactly).
+    """
+    q, scale = quantize_int8(x)
+    scale_max = jax.lax.pmax(scale, axis_name)
+    # requantize against the shared scale so the integer sum is coherent
+    q2 = jnp.clip(jnp.round(x / scale_max), -127, 127).astype(jnp.int32)
+    total = jax.lax.psum(q2, axis_name)
+    return total.astype(jnp.float32) * scale_max
+
+
+def make_compressed_grad_allreduce(mesh: Mesh, axis: str = "data"):
+    """Returns ef_allreduce(grads, error_carry) -> (mean_grads, new_carry).
+
+    grads are expected replicated along ``axis``'s orthogonal dims per the
+    usual DP layout; each leaf is reduced over ``axis`` with int8 payloads
+    and an error-feedback carry of the same shape.
+    """
+    n = dict(zip(mesh.axis_names, mesh.shape.values()))[axis]
+
+    def _leaf(g, carry, n_shards):
+        corrected = g.astype(jnp.float32) + carry
+        summed = compressed_psum(corrected, axis)
+        mean = summed / n_shards
+        # what this shard actually contributed after quantization
+        q, scale = quantize_int8(corrected)
+        sent = dequantize_int8(q, scale)
+        new_carry = corrected - sent
+        return mean.astype(g.dtype), new_carry
+
+    @partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(P(axis), P(axis)),
+        out_specs=(P(), P(axis)),
+    )
+    def _reduce_flat(gs, carries):
+        # gs: this shard's stacked flat grads (1, N); carries same
+        g = gs[0]
+        c = carries[0]
+        mean, new_c = _leaf(g, c, float(n))
+        return mean, new_c[None]
+
+    def ef_allreduce(grad_shards: jax.Array, error_carry: jax.Array):
+        """grad_shards: (n_shards, N) — per-DP-shard flat gradients."""
+        return _reduce_flat(grad_shards, error_carry)
+
+    return ef_allreduce
+
+
+def flatten_grads(grads) -> tuple[jax.Array, any]:
+    leaves, treedef = jax.tree.flatten(grads)
+    flat = jnp.concatenate([jnp.ravel(l).astype(jnp.float32) for l in leaves])
+    return flat, (treedef, [(l.shape, l.dtype) for l in leaves])
+
+
+def unflatten_grads(flat: jax.Array, meta) -> any:
+    treedef, shapes = meta
+    out, off = [], 0
+    for shape, dtype in shapes:
+        n = 1
+        for d in shape:
+            n *= d
+        out.append(flat[off:off + n].reshape(shape).astype(dtype))
+        off += n
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,3 @@
+from repro.serving.engine import GenerationEngine
+
+__all__ = ["GenerationEngine"]

@@ -1,0 +1,10 @@
+from repro.train.optimizer import AdamWConfig, make_optimizer
+from repro.train.step import make_train_step, init_train_state, train_state_axes
+
+__all__ = [
+    "AdamWConfig",
+    "make_optimizer",
+    "make_train_step",
+    "init_train_state",
+    "train_state_axes",
+]

@@ -1,0 +1,155 @@
+"""C4/C5: TopicBus (Kafka analogue) + ArtifactStore (PV/PVC analogue)."""
+
+import threading
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ArtifactStore, TopicBus
+from repro.core.bus import Consumer
+from repro.core.registry import ServiceRegistry
+
+
+# ---------------------------------------------------------------------------
+# bus
+# ---------------------------------------------------------------------------
+
+
+def test_bus_offsets_monotonic(tmp_path):
+    bus = TopicBus(tmp_path)
+    offs = [bus.publish("t", {"i": i}) for i in range(10)]
+    assert offs == list(range(10))
+    msgs = bus.read("t")
+    assert [m.value["i"] for m in msgs] == list(range(10))
+
+
+def test_bus_consumer_groups_independent(tmp_path):
+    bus = TopicBus(tmp_path)
+    for i in range(5):
+        bus.publish("t", i)
+    a = bus.consume("t", "groupA")
+    assert len(a) == 5
+    bus.commit("t", "groupA", 5)
+    assert bus.consume("t", "groupA") == []
+    assert len(bus.consume("t", "groupB")) == 5  # replay for a new group
+    assert bus.lag("t", "groupA") == 0 and bus.lag("t", "groupB") == 5
+
+
+def test_bus_at_least_once_redelivery(tmp_path):
+    bus = TopicBus(tmp_path)
+    for i in range(3):
+        bus.publish("t", i)
+    seen = []
+
+    def flaky(msg):
+        seen.append(msg.value)
+        if msg.value == 1 and seen.count(1) == 1:
+            raise RuntimeError("crash mid-processing")
+
+    c = Consumer(bus, "t", "g")
+    with pytest.raises(RuntimeError):
+        c.poll(flaky)
+    c.poll(flaky)  # redelivers 1 then 2
+    assert seen == [0, 1, 1, 2]  # at-least-once: 1 seen twice
+
+
+def test_bus_concurrent_producers(tmp_path):
+    bus = TopicBus(tmp_path)
+
+    def produce(k):
+        for i in range(50):
+            bus.publish("t", {"k": k, "i": i}, key=str(k))
+
+    threads = [threading.Thread(target=produce, args=(k,)) for k in range(4)]
+    [t.start() for t in threads]
+    [t.join() for t in threads]
+    msgs = bus.read("t")
+    assert len(msgs) == 200
+    assert [m.offset for m in msgs] == list(range(200))
+    # per-producer order preserved
+    for k in range(4):
+        seq = [m.value["i"] for m in msgs if m.value["k"] == k]
+        assert seq == sorted(seq)
+
+
+def test_registry_resolve_latest(tmp_path):
+    bus = TopicBus(tmp_path)
+    reg = ServiceRegistry(bus)
+    reg.register("svc", "pod://a", "podA")
+    reg.register("svc", "pod://b", "podB")
+    ep = reg.resolve("svc")
+    assert ep.address == "pod://b"
+    reg.deregister("svc")
+    assert reg.resolve("svc") is None
+
+
+# ---------------------------------------------------------------------------
+# storage
+# ---------------------------------------------------------------------------
+
+
+def test_store_roundtrip_kinds(tmp_path):
+    store = ArtifactStore(tmp_path)
+    cases = [b"raw-bytes", {"a": [1, 2, {"b": 3}]}, np.arange(12).reshape(3, 4),
+             ("tuple", 1, 2.5)]
+    for obj in cases:
+        ref = store.put(obj)
+        got = store.get(ref)
+        if isinstance(obj, np.ndarray):
+            np.testing.assert_array_equal(got, obj)
+        elif isinstance(obj, tuple):
+            assert tuple(got) == obj
+        else:
+            assert got == obj
+
+
+def test_store_content_addressed_dedup(tmp_path):
+    store = ArtifactStore(tmp_path)
+    r1 = store.put({"x": 1}, name="a")
+    r2 = store.put({"x": 1}, name="b")
+    assert r1.split("/")[0] == r2.split("/")[0]  # same digest
+
+
+def test_store_integrity_check(tmp_path):
+    store = ArtifactStore(tmp_path)
+    ref = store.put(b"payload")
+    digest = ref.split("://")[1].split("/")[0]
+    f = tmp_path / "shared" / "objects" / digest / "data"
+    f.write_bytes(b"tampered")
+    with pytest.raises(IOError, match="integrity"):
+        store.get(ref)
+
+
+def test_store_tiers_and_claims(tmp_path):
+    store = ArtifactStore(tmp_path, node_id="nodeX")
+    rn = store.put(b"local", tier="node")
+    rs = store.put(b"shared", tier="shared")
+    assert rn.startswith("node://") and rs.startswith("shared://")
+    assert store.get(rn) == b"local"
+    claim = store.claim("ckpt", tier="shared", capacity_bytes=1 << 20)
+    assert claim.path.exists()
+    (claim.path / "f.bin").write_bytes(b"z" * 100)
+    assert claim.used_bytes() == 100
+    store.release(claim)
+    assert not claim.path.exists()
+
+
+def test_store_tree_roundtrip(tmp_path):
+    import jax
+    store = ArtifactStore(tmp_path)
+    tree = {"a": np.arange(5), "b": {"c": np.ones((2, 2))}}
+    ref = store.put_tree(tree)
+    meta = store.get(ref)
+    leaves = [store.get(r) for r in meta["leaves"]]
+    np.testing.assert_array_equal(leaves[0], tree["a"])
+    np.testing.assert_array_equal(leaves[1], tree["b"]["c"])
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.binary(min_size=0, max_size=512))
+def test_store_bytes_roundtrip_property(blob):
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        store = ArtifactStore(d)
+        assert store.get(store.put(blob)) == blob

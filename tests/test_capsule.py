@@ -1,0 +1,48 @@
+"""C2: capsule capture — id stability, drift detection."""
+
+import dataclasses
+
+from repro.core.capsule import Capsule, capture, seal_step
+from repro.core.dag import Step
+
+
+def make_step():
+    def fn(inputs):
+        return {"y": inputs.get("x", 0) + 1}
+
+    return Step("s", fn=fn, reads={"x"}, writes={"y"})
+
+
+def test_capsule_id_stable():
+    s = make_step()
+    c1 = capture(s, config={"lr": 0.1})
+    c2 = capture(s, config={"lr": 0.1})
+    assert c1.capsule_id == c2.capsule_id
+
+
+def test_capsule_id_sensitive_to_config():
+    s = make_step()
+    assert capture(s, {"lr": 0.1}).capsule_id != capture(s, {"lr": 0.2}).capsule_id
+
+
+def test_capsule_roundtrip_json():
+    c = capture(make_step(), {"a": 1}, seeds={"train": 7})
+    c2 = Capsule.from_json(c.to_json())
+    assert c2.capsule_id == c.capsule_id
+    assert c2.seeds == {"train": 7}
+
+
+def test_drift_detection():
+    img = seal_step(make_step(), config={})
+    current = capture(make_step(), config={})
+    assert img.verify_against(current) == []  # same env -> no drift
+    drifted = dataclasses.replace(current, packages={**current.packages, "jax": "9.9.9"})
+    report = img.verify_against(drifted)
+    assert any("jax" in line for line in report)
+
+
+def test_capsule_captures_packages_and_platform():
+    c = capture(make_step())
+    assert "jax" in c.packages and "numpy" in c.packages
+    assert c.platform["jax_backend"] in ("cpu", "tpu", "gpu")
+    assert make_step().name in c.code

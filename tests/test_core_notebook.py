@@ -1,0 +1,135 @@
+"""C1: AST dataflow extraction + piped-section splitting."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Notebook, split_pipeline
+from repro.core.dag import build_cell_dag
+from repro.core.notebook import Cell, extract_usage
+
+
+# ---------------------------------------------------------------------------
+# AST extraction
+# ---------------------------------------------------------------------------
+
+CASES = [
+    ("x = 1", set(), {"x"}),
+    ("y = x + 1", {"x"}, {"y"}),
+    ("x += 1", {"x"}, {"x"}),
+    ("import numpy as np\nz = np.zeros(3)", set(), {"np", "z"}),
+    ("def f(a):\n    return a + b\nc = f(1)", {"b"}, {"f", "c"}),
+    ("out = [i * scale for i in data]", {"scale", "data"}, {"out"}),
+    ("d = {k: v for k, v in pairs}", {"pairs"}, {"d"}),
+    ("g = lambda t: t + offset\nh = g(2)", {"offset"}, {"g", "h"}),
+    ("for row in rows:\n    total = total + row", {"rows", "total"}, {"row", "total"}),
+    ("class A:\n    pass\na = A()", set(), {"A", "a"}),
+    ("with open(p) as fh:\n    text = fh.read()", {"p"}, {"fh", "text"}),
+]
+
+
+@pytest.mark.parametrize("src,reads,writes", CASES)
+def test_extract_usage(src, reads, writes):
+    r, w = extract_usage(src)
+    assert r == reads, (src, r)
+    assert w == writes, (src, w)
+
+
+def test_comprehension_variable_not_leaked():
+    r, w = extract_usage("clean = [x for x in raw if x % 7 != 0]")
+    assert "x" not in r and "x" not in w
+    assert r == {"raw"} and w == {"clean"}
+
+
+# ---------------------------------------------------------------------------
+# splitting algorithm
+# ---------------------------------------------------------------------------
+
+
+def test_linear_chain_fuses_to_one_step():
+    nb = Notebook.from_sources(["a = 1", "b = a + 1", "c = b * 2"])
+    g = split_pipeline(nb)
+    assert len(g.steps) == 1, g.steps.keys()
+
+
+def test_pipe_tag_forces_boundary():
+    nb = Notebook.from_sources(["a = 1", "# %%pipe\nb = a + 1"])
+    g = split_pipeline(nb)
+    assert len(g.steps) == 2
+    assert g.edges[("cell0", "cell1")] == {"a"}
+
+
+def test_fanout_creates_parallel_steps():
+    nb = Notebook.from_sources(
+        ["base = list(range(10))",
+         "evens = [v for v in base if v % 2 == 0]",
+         "odds = [v for v in base if v % 2 == 1]",
+         "summary = (len(evens), len(odds))"]
+    )
+    g = split_pipeline(nb)
+    assert len(g.steps) >= 3  # fan-out forces separate pods
+    order = g.topological()
+    assert order.index("cell0") < order.index("cell1")
+    assert order.index("cell0") < order.index("cell2")
+
+
+def test_split_equivalence_to_linear_run():
+    srcs = [
+        "raw = list(range(50))",
+        "clean = [v for v in raw if v % 3]",
+        "# %%pipe\ns = sum(clean)",
+        "n = len(clean)",
+        "mean = s / n",
+    ]
+    nb = Notebook.from_sources(srcs)
+    env = nb.run_linear()
+    g = split_pipeline(nb)
+    # execute the step graph sequentially in topo order
+    artifacts = {}
+    for name in g.topological():
+        step = g.steps[name]
+        out = step.run({k: artifacts[k] for k in step.reads})
+        artifacts.update(out)
+    assert artifacts["mean"] == env["mean"]
+
+
+def test_cycle_detection():
+    from repro.core.dag import Step, StepGraph
+    steps = {
+        "a": Step("a", fn=lambda i: {}, writes={"x"}),
+        "b": Step("b", fn=lambda i: {}, reads={"x"}, writes={"y"}),
+    }
+    g = StepGraph(steps=steps, edges={("a", "b"): {"x"}, ("b", "a"): {"y"}})
+    with pytest.raises(ValueError, match="cycle"):
+        g.topological()
+
+
+# hypothesis: random linear programs — split always preserves semantics
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.sampled_from([
+    "v{i} = {j} + 1",
+    "v{i} = v{j} * 2",
+    "# %%pipe\nv{i} = v{j} - 1",
+    "v{i} = v{j} + v{k}",
+]), min_size=2, max_size=8), st.integers(0, 1000))
+def test_split_equivalence_property(templates, seed):
+    srcs = ["v0 = 7"]
+    for i, t in enumerate(templates, start=1):
+        srcs.append(t.format(i=i, j=(seed + i) % i, k=(seed * 3 + i) % i))
+    nb = Notebook.from_sources(srcs)
+    env = nb.run_linear()
+    g = split_pipeline(nb)
+    artifacts = {}
+    for name in g.topological():
+        step = g.steps[name]
+        artifacts.update(step.run({k: artifacts[k] for k in step.reads}))
+    finals = {k: v for k, v in env.items() if k.startswith("v")}
+    for k, v in finals.items():
+        assert artifacts.get(k, v) == v, (k, srcs)
+
+
+def test_dag_edges_last_writer_wins():
+    cells = [Cell(source="x = 1", name="c0"),
+             Cell(source="x = 2", name="c1"),
+             Cell(source="y = x", name="c2")]
+    edges = build_cell_dag(cells)
+    assert (1, 2, {"x"}) in edges and all(e[0] != 0 for e in edges)

@@ -1,0 +1,195 @@
+"""C6: scheduler fault tolerance — retries, speculative replicas, liveness,
+chaos recovery — plus C3 deployer rendering."""
+
+import time
+from pathlib import Path
+
+import pytest
+
+from repro.core import ArtifactStore, TopicBus, WorkflowScheduler
+from repro.core.dag import Step, StepGraph
+from repro.core.deployer import DynamicPodDeployer, PodManager
+from repro.core.faults import FaultInjector, KillRule
+from repro.core.scheduler import RetryPolicy
+
+
+def make_graph(steps, edges):
+    return StepGraph(steps=steps, edges=edges).validate()
+
+
+def run(graph, tmp_path, faults=None, retry=None, **kw):
+    bus = TopicBus(tmp_path / "bus")
+    store = ArtifactStore(tmp_path / "store")
+    sched = WorkflowScheduler(
+        graph, bus, store,
+        retry=retry or RetryPolicy(max_attempts=4, backoff_s=0.01),
+        fault_injector=faults, **kw,
+    )
+    return sched, sched.run(timeout_s=60)
+
+
+def test_diamond_workflow_runs(tmp_path):
+    steps = {
+        "src": Step("src", fn=lambda i: {"x": 10}, writes={"x"}, replicas=1),
+        "l": Step("l", fn=lambda i: {"a": i["x"] + 1}, reads={"x"}, writes={"a"}, replicas=1),
+        "r": Step("r", fn=lambda i: {"b": i["x"] * 2}, reads={"x"}, writes={"b"}, replicas=1),
+        "join": Step("join", fn=lambda i: {"y": i["a"] + i["b"]},
+                     reads={"a", "b"}, writes={"y"}, replicas=1),
+    }
+    edges = {("src", "l"): {"x"}, ("src", "r"): {"x"},
+             ("l", "join"): {"a"}, ("r", "join"): {"b"}}
+    _, arts = run(make_graph(steps, edges), tmp_path)
+    assert arts["y"] == 31
+
+
+def test_retry_after_crash(tmp_path):
+    attempts = []
+
+    def flaky(inputs):
+        attempts.append(1)
+        if len(attempts) < 3:
+            raise RuntimeError("transient")
+        return {"v": 42}
+
+    steps = {"s": Step("s", fn=flaky, writes={"v"}, replicas=1, max_attempts=4)}
+    sched, arts = run(make_graph(steps, {}), tmp_path)
+    assert arts["v"] == 42 and len(attempts) == 3
+    kinds = [e["kind"] for e in sched.events.history()]
+    assert kinds.count("step_retry_scheduled") == 2
+    assert kinds.count("step_error") == 2
+
+
+def test_permanent_failure_raises(tmp_path):
+    def broken(inputs):
+        raise ValueError("always")
+
+    steps = {"s": Step("s", fn=broken, writes={"v"}, replicas=1)}
+    with pytest.raises(RuntimeError, match="failed after"):
+        run(make_graph(steps, {}), tmp_path,
+            retry=RetryPolicy(max_attempts=2, backoff_s=0.01))
+
+
+def test_speculative_replicas_first_wins(tmp_path):
+    """ReplicaSet analogue: slow replica is superseded by the fast one."""
+    def racy(inputs, ctx):
+        if ctx.attempt % 2 == 0:  # even attempts are fast
+            return {"v": ctx.attempt}
+        for _ in range(200):
+            time.sleep(0.02)
+            ctx.check()  # cancelled when a sibling wins
+        return {"v": -1}
+
+    steps = {"s": Step("s", fn=racy, writes={"v"}, replicas=3)}
+    sched, arts = run(make_graph(steps, {}), tmp_path)
+    assert arts["v"] % 2 == 0
+    done = sched.events.history("step_done")
+    assert len(done) == 1  # idempotent completion despite 3 replicas
+
+
+def test_chaos_kill_then_recover(tmp_path):
+    calls = []
+
+    def work(inputs, ctx):
+        calls.append(ctx.attempt)
+        for _ in range(30):
+            time.sleep(0.01)
+            ctx.beat(progress=len(calls))
+        return {"v": "done"}
+
+    faults = FaultInjector([KillRule(step="s", after_s=0.05, times=1)])
+    steps = {"s": Step("s", fn=work, writes={"v"}, replicas=1, max_attempts=4)}
+    sched, arts = run(make_graph(steps, {}), tmp_path, faults=faults)
+    assert arts["v"] == "done"
+    assert len(calls) >= 2  # first attempt killed, retry succeeded
+
+
+def test_long_running_forces_single_replica(tmp_path):
+    ran = []
+
+    def trainer(inputs, ctx):
+        ran.append(ctx.pod_name)
+        return {"v": 1}
+
+    steps = {"s": Step("s", fn=trainer, writes={"v"}, replicas=3, long_running=True)}
+    _, arts = run(make_graph(steps, {}), tmp_path)
+    assert len(ran) == 1  # DESIGN.md changed-assumption #2
+
+
+def test_artifacts_stored_with_refs(tmp_path):
+    steps = {"s": Step("s", fn=lambda i: {"v": [1, 2, 3]}, writes={"v"}, replicas=1)}
+    sched, arts = run(make_graph(steps, {}), tmp_path)
+    done = sched.events.history("step_done")[0]
+    ref = done["refs"]["v"]
+    assert sched.store.get(ref) == [1, 2, 3]
+
+
+# ---------------------------------------------------------------------------
+# deployer (C3)
+# ---------------------------------------------------------------------------
+
+
+def test_pod_manager_roles_and_topics():
+    steps = {
+        "a": Step("a", fn=lambda i: {"x": 1}, writes={"x"}),
+        "b": Step("b", fn=lambda i: {"y": 1}, reads={"x"}, writes={"y"}),
+        "c": Step("c", fn=lambda i: {}, reads={"y"}),
+    }
+    g = make_graph(steps, {("a", "b"): {"x"}, ("b", "c"): {"y"}})
+    pm = PodManager(g)
+    assert pm.role_of("a") == "producer"
+    assert pm.role_of("b") == "both"
+    assert pm.role_of("c") == "consumer"
+    in_t, out_t = pm.topics_of("b")
+    assert in_t == ["pipe.a.b"] and out_t == ["pipe.b.c"]
+
+
+def test_deployer_renders_paper_listing1(tmp_path):
+    steps = {"train": Step("train", fn=lambda i: {"m": 1}, writes={"m"})}
+    g = make_graph(steps, {})
+    dep = DynamicPodDeployer(PodManager(g), out_dir=tmp_path / "k8s")
+    specs = dep.deploy_all()
+    y = (tmp_path / "k8s" / "train-deployment.yaml").read_text()
+    # the paper's Listing 1 structure, faithfully
+    for needle in ["apiVersion: apps/v1", "kind: Deployment", "replicas: 3",
+                   "RollingUpdate", "maxUnavailable: 1", "maxSurge: 1",
+                   "KAFKA_BROKER", "livenessProbe", "readinessProbe",
+                   "/healthz", "/readiness", "persistentVolumeClaim",
+                   "mountPath: /mnt/efs"]:
+        assert needle in y, needle
+    pv = (tmp_path / "k8s" / "train-storage.yaml").read_text()
+    assert "PersistentVolume" in pv and "PersistentVolumeClaim" in pv
+    assert specs[0].replicas == 3  # paper default
+
+
+def test_straggler_hedging(tmp_path):
+    """A slow-but-alive attempt triggers ONE hedged speculative attempt;
+    the fast hedge wins and the straggler is cancelled."""
+    import threading
+
+    state = {"n": 0}
+    lock = threading.Lock()
+
+    def work(inputs, ctx):
+        with lock:
+            state["n"] += 1
+            first = state["n"] == 1
+        if first:  # the straggler: alive (heartbeating) but slow
+            for _ in range(500):
+                time.sleep(0.02)
+                ctx.beat(progress=1)
+            return {"v": "slow"}
+        return {"v": "fast"}
+
+    steps = {"s": Step("s", fn=work, writes={"v"}, replicas=1, max_attempts=4)}
+    bus = TopicBus(tmp_path / "bus")
+    store = ArtifactStore(tmp_path / "store")
+    sched = WorkflowScheduler(
+        make_graph(steps, {}), bus, store,
+        retry=RetryPolicy(max_attempts=4, backoff_s=0.01),
+        hedge_after_s=0.2,
+    )
+    arts = sched.run(timeout_s=60)
+    assert arts["v"] == "fast"
+    kinds = [e["kind"] for e in sched.events.history()]
+    assert kinds.count("pod_hedged") == 1
+    assert kinds.count("step_done") == 1
