@@ -1,7 +1,9 @@
-"""Serving example: batched requests through the bus with autoscaling.
+"""Serving example: continuous batching from the bus with autoscaling.
 
-Requests flow through the Kafka-analogue topic, engine workers batch and
-generate, the HPA-analogue scales workers with consumer lag.
+Requests flow through the Kafka-analogue topic, engine workers admit them
+into in-flight paged-KV decode slots, the HPA-analogue scales workers with
+consumer lag. Pass ``--engine lockstep`` to compare against the old
+synchronous micro-batcher.
 
 Run: PYTHONPATH=src python examples/serve_smollm.py
 """
@@ -16,7 +18,7 @@ def main():
         "--arch", "smollm-360m", "--reduced",
         "--requests", "32", "--max-new", "8", "--max-batch", "4",
         "--workdir", "experiments/serving",
-    ]
+    ] + sys.argv[1:]
     print("+", " ".join(cmd))
     raise SystemExit(subprocess.call(cmd))
 

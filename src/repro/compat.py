@@ -1,0 +1,32 @@
+"""Small shims over JAX API differences across installed versions.
+
+The repo targets recent JAX, but the container may carry an older release
+(e.g. no ``jax.tree.leaves_with_path``, no ``jax.sharding.AxisType``).
+Everything here degrades gracefully instead of crashing at import time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.tree_util
+
+
+def _get_shard_map():
+    """``jax.shard_map`` (new) or ``jax.experimental.shard_map.shard_map``."""
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        return fn
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map
+
+
+shard_map = _get_shard_map()
+
+
+def tree_leaves_with_path(tree, is_leaf=None):
+    """``jax.tree.leaves_with_path`` with a tree_util fallback for old JAX."""
+    fn = getattr(jax.tree, "leaves_with_path", None)
+    if fn is not None:
+        return fn(tree, is_leaf=is_leaf)
+    return jax.tree_util.tree_leaves_with_path(tree, is_leaf=is_leaf)

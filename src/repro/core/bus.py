@@ -112,7 +112,9 @@ class TopicBus:
 
     def commit(self, topic: str, group: str, offset: int):
         f = self._offsets_dir(topic) / group
-        tmp = f.with_suffix(".tmp")
+        # unique tmp per writer: concurrent committers must not rename each
+        # other's tmp away (last rename wins, which at-least-once tolerates)
+        tmp = f.with_suffix(f".{os.getpid()}.{threading.get_ident()}.tmp")
         tmp.write_text(str(offset))
         tmp.rename(f)  # atomic
 

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.paged_attention import paged_attention_bkgd
 from repro.kernels.ssd_scan import ssd_scan_bhsp
 
 
@@ -63,6 +64,40 @@ def flash_attention(
         )
         return jnp.swapaxes(out, 1, 2)
     raise ValueError(f"unknown attention impl {impl!r}")
+
+
+def paged_attention(
+    q: jax.Array,             # (B, H, D) one query token per sequence
+    k_pages: jax.Array,       # (P, page, KVH, D) shared page pool
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # (B, MP) int32
+    lengths: jax.Array,       # (B,) int32 valid positions per sequence
+    *,
+    scale: float | None = None,
+    impl: str = "auto",
+    interpret: bool = False,
+) -> jax.Array:
+    """Single-token decode attention over a paged KV cache. Returns (B, H, D).
+
+    Idle slots (length 0) return zeros rather than NaN, so a continuous
+    batcher can keep dead rows in the decode batch.
+    """
+    if impl == "auto":
+        impl = _auto_impl()
+    if impl in ("naive", "xla_chunked"):
+        return ref.paged_attention_ref(
+            q, k_pages, v_pages, block_tables, lengths, scale=scale
+        )
+    if impl == "pallas":
+        b, h, d = q.shape
+        kvh = k_pages.shape[2]
+        qg = q.reshape(b, kvh, h // kvh, d)
+        out = paged_attention_bkgd(
+            qg, k_pages, v_pages, block_tables, lengths,
+            scale=scale, interpret=interpret,
+        )
+        return out.reshape(b, h, d)
+    raise ValueError(f"unknown paged attention impl {impl!r}")
 
 
 # ---------------------------------------------------------------------------

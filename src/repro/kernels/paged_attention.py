@@ -1,0 +1,144 @@
+"""Paged attention decode as a Pallas TPU kernel.
+
+One query token per sequence attends over K/V stored in a shared page pool
+(`kv_cache.PagedKVCache` layout): pages are gathered *inside the grid* via a
+scalar-prefetched block table, so sequences of wildly different lengths share
+one decode batch with zero re-padding and no dense gather in HBM.
+
+Grid: (batch, kv-head, logical-page) with the page dimension innermost — TPU
+grid steps are sequential, so the online-softmax state (acc, m, l) lives in
+VMEM scratch and carries across pages of the same (batch, head), reusing the
+scratch pattern from ``flash_attention.py``. The BlockSpec index_map reads
+``block_tables[b, p]`` (scalar prefetch) to DMA the right physical page;
+pages past a sequence's length map to the reserved null page 0 and are
+skipped via ``pl.when``. GQA is native: q arrives grouped (B, KVH, G, D) and
+each grid cell computes all G grouped heads against one kv head's page.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+_LANES = 128  # TPU vector lane count; scratch stats padded to it
+
+
+def _paged_kernel(
+    bt_ref,    # (B, MP) int32 scalar-prefetch: block tables
+    len_ref,   # (B,)  int32 scalar-prefetch: valid positions per sequence
+    q_ref, k_ref, v_ref,  # VMEM blocks
+    o_ref,
+    acc_ref, m_ref, l_ref,  # VMEM scratch
+    *,
+    scale: float,
+    page_size: int,
+    num_logical_pages: int,
+):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[b]
+    # pages entirely past the valid prefix hold no live positions: skip
+    run = p * page_size < length
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)        # (G, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)     # (page, D)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                   # (G, page)
+        pos = p * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, dimension=1
+        )
+        s = jnp.where(pos < length, s, NEG_INF)
+        m_prev = m_ref[:, 0]
+        l_prev = l_ref[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        pexp = jnp.exp(s - m_new[:, None])
+        pexp = jnp.where(pos < length, pexp, 0.0)  # exact zeros on dead slots
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(pexp, axis=-1)
+        pv = jax.lax.dot_general(
+            pexp, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+        m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+
+    @pl.when(p == num_logical_pages - 1)
+    def _finalize():
+        # max(l, eps): a length-0 slot (idle) finalizes to exact zeros
+        l = l_ref[:, 0]
+        o_ref[0, 0] = (
+            acc_ref[...] / jnp.maximum(l, 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+
+
+def paged_attention_bkgd(
+    q: jax.Array,             # (B, KVH, G, D) grouped query, one token per seq
+    k_pages: jax.Array,       # (P, page, KVH, D)
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # (B, MP) int32
+    lengths: jax.Array,       # (B,) int32
+    *,
+    scale: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    b, kvh, group, d = q.shape
+    _, page_size, pkvh, _ = k_pages.shape
+    assert pkvh == kvh, (pkvh, kvh)
+    mp = block_tables.shape[1]
+    scale = scale if scale is not None else d ** -0.5
+
+    grid = (b, kvh, mp)
+    kernel = functools.partial(
+        _paged_kernel,
+        scale=scale,
+        page_size=page_size,
+        num_logical_pages=mp,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (1, 1, group, d), lambda b_, h_, p_, bt, ln: (b_, h_, 0, 0)
+            ),
+            # physical page comes from the prefetched block table
+            pl.BlockSpec(
+                (1, page_size, 1, d),
+                lambda b_, h_, p_, bt, ln: (bt[b_, p_], 0, h_, 0),
+            ),
+            pl.BlockSpec(
+                (1, page_size, 1, d),
+                lambda b_, h_, p_, bt, ln: (bt[b_, p_], 0, h_, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, group, d), lambda b_, h_, p_, bt, ln: (b_, h_, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((group, d), jnp.float32),       # acc
+            pltpu.VMEM((group, _LANES), jnp.float32),  # m (col 0 used)
+            pltpu.VMEM((group, _LANES), jnp.float32),  # l (col 0 used)
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, group, d), q.dtype),
+        interpret=interpret,
+    )(block_tables, lengths, q, k_pages, v_pages)

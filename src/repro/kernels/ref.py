@@ -117,6 +117,52 @@ def flash_attention_chunked(
 
 
 # ---------------------------------------------------------------------------
+# paged attention (single-token decode over a block-table KV pool)
+# ---------------------------------------------------------------------------
+
+
+def paged_attention_ref(
+    q: jax.Array,             # (B, H, D) one query token per sequence
+    k_pages: jax.Array,       # (P, page, KVH, D) shared page pool
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # (B, MP) int32 physical page per logical page
+    lengths: jax.Array,       # (B,) int32 valid positions per sequence
+    *,
+    scale: float | None = None,
+) -> jax.Array:
+    """Gather-based oracle for the paged decode kernel.
+
+    Each sequence reads its K/V through the block table; positions >= length
+    are masked. A sequence with length 0 (an idle slot) returns zeros — the
+    same convention as the Pallas kernel, so idle decode slots never produce
+    NaNs. Returns (B, H, D) in q.dtype.
+    """
+    b, h, d = q.shape
+    _, page, kvh, _ = k_pages.shape
+    mp = block_tables.shape[1]
+    group = h // kvh
+    scale = scale if scale is not None else d ** -0.5
+
+    # (B, MP, page, KVH, D) -> (B, MP*page, KVH, D): logical contiguous view
+    keys = k_pages[block_tables].reshape(b, mp * page, kvh, d)
+    vals = v_pages[block_tables].reshape(b, mp * page, kvh, d)
+
+    qg = q.reshape(b, kvh, group, d).astype(jnp.float32) * scale
+    scores = jnp.einsum(
+        "bkgd,bskd->bkgs", qg, keys.astype(jnp.float32)
+    )  # (B, KVH, G, MP*page)
+    valid = jnp.arange(mp * page)[None, :] < lengths[:, None]  # (B, S)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    # explicit normalization (not jax.nn.softmax) so an all-masked row gives 0
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m) * valid[:, None, None, :]
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bkgs,bskd->bkgd", p / jnp.maximum(l, 1e-30),
+                     vals.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
 # Mamba2 SSD
 # ---------------------------------------------------------------------------
 

@@ -1,9 +1,12 @@
-"""Serving driver: batched generation behind a bus topic + autoscaler.
+"""Serving driver: continuous-batching generation behind a bus topic.
 
 Requests land on the ``requests`` topic (Kafka analogue); engine workers
-consume micro-batches, generate with prefill+decode, and publish to
-``responses``. The HPA analogue watches consumer lag and scales workers in
-[min,max]. CPU-runnable with reduced configs:
+admit them straight into in-flight decode slots (paged KV cache, one static
+decode shape — see ``serving/engine.py``) and publish to ``responses``. The
+HPA analogue watches consumer lag and scales workers in [min,max]. The old
+lockstep micro-batcher stays available via ``--engine lockstep`` (and is the
+fallback for families without a paged decode path). CPU-runnable with
+reduced configs:
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --reduced \
       --requests 24
@@ -12,7 +15,6 @@ consume micro-batches, generate with prefill+decode, and publish to
 from __future__ import annotations
 
 import argparse
-import json
 import threading
 import time
 from pathlib import Path
@@ -26,23 +28,27 @@ def main() -> int:
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--max-new", type=int, default=8)
-    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="lockstep micro-batch size / paged slot count")
+    ap.add_argument("--engine", choices=["paged", "lockstep"], default="paged")
     ap.add_argument("--workdir", default="experiments/serve_run")
     args = ap.parse_args()
 
     from repro.configs import get_arch, reduced
-    from repro.core import ArtifactStore, TopicBus
+    from repro.core import TopicBus
     from repro.core.autoscaler import Autoscaler, AutoscalerConfig
     from repro.core.bus import Consumer
     from repro.core.events import EventLog
     from repro.core.registry import ServiceRegistry
     from repro.models import build_model
-    from repro.serving import GenerationEngine
+    from repro.serving import ContinuousBatchingEngine, GenerationEngine
     from repro.serving.engine import Request
 
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
+    paged_ok = not cfg.is_encoder_decoder and cfg.family in ("dense", "moe", "vlm")
+    use_paged = args.engine == "paged" and paged_ok
     workdir = Path(args.workdir)
     workdir.mkdir(parents=True, exist_ok=True)
     bus = TopicBus(workdir / "bus")
@@ -71,9 +77,36 @@ def main() -> int:
     done: dict[str, list[int]] = {}
     lock = threading.Lock()
 
-    def worker(wid: int, stop: threading.Event):
+    def publish(results):
+        for r in results:
+            bus.publish("responses", {"uid": r.uid, "tokens": r.tokens})
+            with lock:
+                done[r.uid] = r.tokens
+
+    def paged_worker(wid: int, stop: threading.Event):
+        engine = ContinuousBatchingEngine(
+            cfg, params, max_len=max_len, max_slots=max(args.max_batch, 2)
+        )
+        registry.register("generate", f"pod://server-{wid}", f"server-{wid}")
+        while not stop.is_set():
+            # admit straight from the bus into free decode slots
+            n = engine.admit_from_bus(
+                bus, "requests", group, max_msgs=engine.cache.free_slot_count
+            )
+            for uid, err in engine.drain_rejections():
+                bus.publish("responses", {"uid": uid, "error": err, "tokens": []})
+                with lock:
+                    done[uid] = []
+            if engine.idle:
+                if not n and bus.lag("requests", group) == 0:
+                    return
+                time.sleep(0.01)
+                continue
+            publish(engine.step())
+
+    def lockstep_worker(wid: int, stop: threading.Event):
         engine = GenerationEngine(cfg, params, max_len=max_len)
-        registry.register(f"generate", f"pod://server-{wid}", f"server-{wid}")
+        registry.register("generate", f"pod://server-{wid}", f"server-{wid}")
         consumer = Consumer(bus, "requests", group)
         while not stop.is_set():
             batch: list[Request] = []
@@ -88,11 +121,9 @@ def main() -> int:
                     return
                 time.sleep(0.01)
                 continue
-            results = engine.generate(batch)
-            for r in results:
-                bus.publish("responses", {"uid": r.uid, "tokens": r.tokens})
-                with lock:
-                    done[r.uid] = r.tokens
+            publish(engine.generate(batch))
+
+    worker = paged_worker if use_paged else lockstep_worker
 
     threads: list[threading.Thread] = []
     stop = threading.Event()
@@ -112,7 +143,9 @@ def main() -> int:
 
     wall = time.time() - t0
     print(f"served {len(done)}/{args.requests} requests in {wall:.1f}s "
-          f"({len(done)*args.max_new/wall:.1f} tok/s), peak workers={len(threads)}")
+          f"({len(done)*args.max_new/wall:.1f} tok/s), "
+          f"engine={'paged' if use_paged else 'lockstep'}, "
+          f"peak workers={len(threads)}")
     autoscales = events.history("autoscale")
     print("autoscale events:", [(e["old"], e["new"]) for e in autoscales])
     assert len(done) == args.requests

@@ -83,7 +83,6 @@ def build_workflow(args, workdir: Path):
             ctx.beat(progress=i + 1, loss=losses[-1])  # liveness + kill point
             if (i + 1) % args.ckpt_every == 0 or i + 1 == args.steps:
                 ckpt.save(i + 1, state, meta={"losses": losses}, sync=True)
-        final = {k: np.asarray(v) for k, v in jax.tree.leaves_with_path(state["params"])[:0]}
         return {"losses": losses, "final_step": args.steps,
                 "ckpt_dir": str(ckpt.root)}
 

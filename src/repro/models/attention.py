@@ -136,6 +136,45 @@ def decode_self_attention(
     return o, {"k": kc, "v": vc}
 
 
+def decode_self_attention_paged(
+    p: dict,
+    x: jax.Array,            # (S, 1, D) one token per in-flight slot
+    layer_pages: dict,       # {"k": (P,page,KVH,Dh), "v": ...} this layer's pool
+    block_tables: jax.Array,  # (S, MP) int32
+    lengths: jax.Array,      # (S,) int32 tokens already cached per slot
+    cfg: ModelConfig,
+    *,
+    rope: bool = True,
+    attn_impl: str = "xla_chunked",
+) -> tuple[jax.Array, dict]:
+    """Continuous-batching decode: write the new K/V into each slot's current
+    page, then attend over the block table. Per-slot positions (= lengths)
+    drive RoPE, so slots at different depths coexist in one batch."""
+    positions = lengths[:, None]  # (S, 1) absolute position of the new token
+    q, k, v = _project_qkv(p, x, cfg, positions, rope)
+    num_pages, page = layer_pages["k"].shape[:2]
+    phys = jnp.take_along_axis(
+        block_tables, (lengths // page)[:, None], axis=1
+    )[:, 0]
+    # idle slots (block-table entry 0 = the reserved null page) write out of
+    # bounds and are DROPPED: every surviving scatter index is unique, so the
+    # update order is well-defined (duplicate-index scatter is not)
+    phys = jnp.where(phys == 0, num_pages, phys)
+    off = lengths % page
+    kc = layer_pages["k"].at[phys, off].set(
+        k[:, 0].astype(layer_pages["k"].dtype), mode="drop"
+    )
+    vc = layer_pages["v"].at[phys, off].set(
+        v[:, 0].astype(layer_pages["v"].dtype), mode="drop"
+    )
+    out = ops.paged_attention(
+        q[:, 0], kc, vc, block_tables, lengths + 1,
+        scale=cfg.head_dim ** -0.5, impl=attn_impl,
+    ).astype(x.dtype)  # (S, H, Dh)
+    o = jnp.einsum("bhk,hkd->bd", out, p["wo"])[:, None, :]
+    return o, {"k": kc, "v": vc}
+
+
 def cross_attention(
     p: dict,
     x: jax.Array,          # (B, Sq, D) decoder states

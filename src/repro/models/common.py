@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import tree_leaves_with_path
+
 
 @dataclass(frozen=True)
 class ParamSpec:
@@ -46,7 +48,7 @@ def init_params(specs: Any, key: jax.Array, default_dtype: str) -> Any:
     RNG is folded per tree-path so adding a parameter never reshuffles the
     others (checkpoint/elastic stability).
     """
-    leaves = jax.tree.leaves_with_path(specs, is_leaf=_is_spec)
+    leaves = tree_leaves_with_path(specs, is_leaf=_is_spec)
 
     def one(path, spec: ParamSpec):
         dt = _leaf_dtype(spec, default_dtype)

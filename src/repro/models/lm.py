@@ -400,8 +400,14 @@ class DecoderLM:
     # ------------------------------------------------------------------
     # prefill
     # ------------------------------------------------------------------
-    def prefill(self, params, batch, max_len: int):
-        """Full-sequence forward; returns (cache, last-position logits)."""
+    def prefill(self, params, batch, max_len: int, *, logits_index=None):
+        """Full-sequence forward; returns (cache, one position's logits).
+
+        ``logits_index`` (traced scalar ok) selects which position's logits to
+        return — the continuous batcher right-pads prompts to a shape bucket,
+        so the last *real* token is not the last padded position. Default:
+        the final position (lockstep behaviour).
+        """
         cfg = self.cfg
         x = self.embed_inputs(params, batch)
         b, s, _ = x.shape
@@ -493,7 +499,11 @@ class DecoderLM:
         else:
             raise ValueError(cfg.family)
 
-        x = rms_norm(x[:, -1:, :], params["final_norm"], cfg.norm_eps)
+        if logits_index is None:
+            x = x[:, -1:, :]
+        else:
+            x = jax.lax.dynamic_slice_in_dim(x, logits_index, 1, axis=1)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
         logits = jnp.einsum(
             "bsd,dv->bsv", x, self._unembed_weight(params),
             preferred_element_type=jnp.float32,
@@ -591,3 +601,45 @@ class DecoderLM:
             preferred_element_type=jnp.float32,
         )[:, 0]
         return new_cache, logits
+
+    # ------------------------------------------------------------------
+    # paged decode (continuous batching)
+    # ------------------------------------------------------------------
+    def decode_step_paged(self, params, pages, block_tables, lengths, tokens):
+        """One token per in-flight slot against the paged KV pool.
+
+        pages: {"k": (L,P,page,KVH,Dh), "v": ...} — the shared page pool.
+        block_tables (S, MP) int32, lengths (S,) int32 (tokens already
+        cached per slot; idle slots are 0), tokens (S, 1) int32.
+        Returns (new_pages, logits (S, Vp) f32). Shapes are static across
+        admissions/evictions, so the jitted step never recompiles.
+        """
+        cfg = self.cfg
+        assert cfg.family in ("dense", "moe", "vlm"), cfg.family
+        x = jnp.take(params["embed"], tokens, axis=0)  # (S,1,D)
+
+        def body(x, inp):
+            pl, cl = inp
+            h = rms_norm(x, pl["ln1"], cfg.norm_eps)
+            h, new_cl = attn.decode_self_attention_paged(
+                pl["attn"], h, cl, block_tables, lengths, cfg,
+                attn_impl=self.attn_impl,
+            )
+            x = x + h
+            h = rms_norm(x, pl["ln2"], cfg.norm_eps)
+            if cfg.family == "moe":
+                h, _ = moe_mod.moe_block(pl["moe"], h, cfg)
+            else:
+                h = swiglu(h, pl["mlp"]["w_gate"], pl["mlp"]["w_up"],
+                           pl["mlp"]["w_down"])
+            return x + h, new_cl
+
+        x, new_pages = jax.lax.scan(
+            body, x, (params["layers"], {"k": pages["k"], "v": pages["v"]})
+        )
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum(
+            "bsd,dv->bsv", x, self._unembed_weight(params),
+            preferred_element_type=jnp.float32,
+        )[:, 0]
+        return new_pages, logits

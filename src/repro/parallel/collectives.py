@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
+
 
 def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
@@ -71,7 +73,7 @@ def make_compressed_grad_allreduce(mesh: Mesh, axis: str = "data"):
         return mean.astype(g.dtype), new_carry
 
     @partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
         in_specs=(P(axis), P(axis)),
         out_specs=(P(), P(axis)),

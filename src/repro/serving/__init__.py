@@ -1,3 +1,16 @@
-from repro.serving.engine import GenerationEngine
+from repro.serving.engine import (
+    ContinuousBatchingEngine,
+    GenerationEngine,
+    Request,
+    Result,
+)
+from repro.serving.kv_cache import PagedKVCache, PagePool
 
-__all__ = ["GenerationEngine"]
+__all__ = [
+    "ContinuousBatchingEngine",
+    "GenerationEngine",
+    "PagedKVCache",
+    "PagePool",
+    "Request",
+    "Result",
+]

@@ -1,13 +1,21 @@
-"""Batched generation engine: request queue -> prefill -> decode loop.
+"""Generation engines: lockstep micro-batching and continuous batching.
 
-The engine is a Jup2Kub pipeline *step* in the serving example: requests
-arrive on a bus topic, are micro-batched up to ``max_batch``, prefilled
-together (padded to a shared length), then decoded token-by-token with a
-jitted step. Greedy or temperature sampling.
+``GenerationEngine`` is the original synchronous batcher kept as the serving
+baseline (and for model families without a paged decode path): every request
+in a micro-batch is padded to the longest prompt and the whole batch decodes
+until the slowest request finishes.
+
+``ContinuousBatchingEngine`` is the hot-path replacement: a paged KV cache
+(`kv_cache.PagedKVCache`) shares one fixed-width decode batch between
+sequences of different lengths, new requests are admitted into free slots as
+others finish, and the jitted decode step sees one static shape — continuous
+admission never retriggers compilation. Requests can be admitted straight
+from a ``core.bus`` topic (:meth:`ContinuousBatchingEngine.admit_from_bus`).
 """
 
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
 
 import jax
@@ -15,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import build_model
+from repro.serving.kv_cache import PagedKVCache, cdiv, write_prefill_pages
 
 
 @dataclass
@@ -43,12 +52,16 @@ class GenerationEngine:
         )
         self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
 
-    def _sample(self, logits: jax.Array, temperature: float) -> jax.Array:
-        logits = logits[..., : self.cfg.vocab_size]
-        if temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1)
+    def _sample(self, logits: jax.Array, temps: np.ndarray) -> jax.Array:
+        """Per-request temperatures: row i is sampled with temps[i]."""
+        if (temps <= 0.0).all():
+            return jnp.argmax(
+                logits[..., : self.cfg.vocab_size], axis=-1
+            ).astype(jnp.int32)
         self._key, sub = jax.random.split(self._key)
-        return jax.random.categorical(sub, logits / temperature, axis=-1)
+        return _sample_rows(
+            logits, jnp.asarray(temps, jnp.float32), sub, self.cfg.vocab_size
+        )
 
     def generate(self, requests: list[Request]) -> list[Result]:
         """Serve one micro-batch of requests synchronously."""
@@ -73,14 +86,321 @@ class GenerationEngine:
         cache, logits = self._prefill(self.params, batch)
         results = [Result(r.uid) for r in requests]
         max_new = max(r.max_new_tokens for r in requests)
-        temp = max(r.temperature for r in requests)
-        tok = self._sample(logits, temp).astype(jnp.int32)
+        temps = np.array([r.temperature for r in requests], np.float32)
+        tok = self._sample(logits, temps)
         for i, r in enumerate(results):
             r.tokens.append(int(tok[i]))
         for _ in range(max_new - 1):
             cache, logits = self._decode(self.params, cache, tok[:, None])
-            tok = self._sample(logits, temp).astype(jnp.int32)
+            tok = self._sample(logits, temps)
             for i, r in enumerate(results):
                 if len(r.tokens) < requests[i].max_new_tokens:
                     r.tokens.append(int(tok[i]))
         return results
+
+
+# ---------------------------------------------------------------------------
+# continuous batching
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class _Seq:
+    request: Request
+    tokens: list[int]
+    order: int = 0  # admission sequence number (preemption picks youngest)
+
+
+def _sample_rows(
+    logits: jax.Array,  # (B, Vp) f32
+    temps: jax.Array,   # (B,) f32; <= 0 means greedy
+    key: jax.Array,
+    vocab: int,
+) -> jax.Array:
+    lg = logits[..., :vocab]
+    greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+    sampled = jax.random.categorical(
+        key, lg / jnp.maximum(temps, 1e-6)[:, None], axis=-1
+    ).astype(jnp.int32)
+    return jnp.where(temps > 0.0, sampled, greedy)
+
+
+class ContinuousBatchingEngine:
+    """Paged-KV continuous batcher for decoder-only attention families.
+
+    * Prompts are right-padded to a power-of-two bucket for prefill (bounded
+      compile count); padded K/V positions are routed to the null page.
+    * Decode runs one jitted step over ``max_slots`` fixed-width slots; idle
+      slots carry length 0 and their (masked) attention output is discarded.
+    * Sequences finish independently — their pages return to the pool and
+      the slot is refilled from the waiting queue on the next step.
+    """
+
+    def __init__(
+        self,
+        cfg,
+        params,
+        *,
+        max_len: int = 256,
+        max_slots: int = 8,
+        page_size: int = 16,
+        num_pages: int | None = None,
+        seed: int = 0,
+        attn_impl: str | None = None,
+    ):
+        assert not cfg.is_encoder_decoder, "paged engine is decoder-only"
+        assert cfg.family in ("dense", "moe", "vlm"), (
+            f"continuous batching needs a paged KV path; family "
+            f"{cfg.family!r} should use GenerationEngine"
+        )
+        self.cfg = cfg
+        self.model = (
+            build_model(cfg, attn_impl=attn_impl) if attn_impl else build_model(cfg)
+        )
+        self.params = params
+        self.nf = cfg.num_frontend_tokens if cfg.family == "vlm" else 0
+        self.max_len = max_len
+        self.max_slots = max_slots
+        self.cache = PagedKVCache(
+            num_layers=cfg.num_layers,
+            num_kv_heads=cfg.eff_kv_heads,
+            head_dim=cfg.head_dim,
+            dtype=jnp.dtype(cfg.dtype),
+            max_slots=max_slots,
+            max_context=max_len,
+            page_size=page_size,
+            num_pages=num_pages,
+        )
+        self._base_key = jax.random.key(seed)
+        self._ticks = 0  # sampling-event counter, folded into the RNG key
+
+        # ONE dispatch per decode step: model step + sampling fused, logits
+        # never leave the device. Shapes are static, so this compiles once.
+        # The sampled tokens and advanced lengths are returned device-side:
+        # on steps with no admission/eviction they feed the next step
+        # directly, so the steady-state loop transfers nothing to the device.
+        def decode_and_sample(params, pages, bt, lens, active, tokens, temps,
+                              tick):
+            pages, logits = self.model.decode_step_paged(
+                params, pages, bt, lens, tokens
+            )
+            key = jax.random.fold_in(self._base_key, tick)
+            toks = _sample_rows(logits, temps, key, cfg.vocab_size)
+            return pages, toks[:, None], lens + active
+
+        self._decode = jax.jit(decode_and_sample, donate_argnums=(1,))
+        self._prefill_fns: dict[int, object] = {}
+        self.waiting: deque[Request] = deque()
+        self._slots: dict[int, _Seq] = {}
+        self._done: list[Result] = []
+        self.rejections: list[tuple[str, str]] = []
+        self.stats = {"decode_steps": 0, "prefills": 0, "tokens": 0,
+                      "rejected": 0, "preemptions": 0}
+        self._admit_counter = 0
+        # device mirrors of the host tables; rebuilt only when stale
+        self._dirty = True
+        self._bt_dev = self._lens_dev = self._active_dev = None
+        self._toks_dev = self._temps_dev = None
+
+    # ------------------------------------------------------------------
+    # admission
+    # ------------------------------------------------------------------
+    def enqueue(self, req: Request) -> None:
+        ctx = self.nf + len(req.prompt)
+        if ctx + req.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request {req.uid}: context {ctx}+{req.max_new_tokens} "
+                f"exceeds engine max_len={self.max_len}"
+            )
+        worst = cdiv(ctx + req.max_new_tokens, self.cache.page_size)
+        if worst > self.cache.num_pages - 1:
+            raise ValueError(
+                f"request {req.uid}: needs {worst} KV pages, pool has "
+                f"{self.cache.num_pages - 1} — it could never be scheduled"
+            )
+        self.waiting.append(req)
+
+    def admit_from_bus(self, bus, topic: str, group: str, max_msgs: int = 32) -> int:
+        """Pull pending requests from a ``core.bus`` topic into the waiting
+        queue (at-least-once: each message is committed after enqueue).
+
+        Malformed or unservable messages are rejected — recorded in
+        ``self.rejections`` / ``stats['rejected']`` — and still committed,
+        so one poison message never wedges the consumer group."""
+        n = 0
+        for m in bus.consume(topic, group, limit=max_msgs):
+            v = m.value
+            try:
+                self.enqueue(Request(
+                    v["uid"], list(v["prompt"]),
+                    int(v.get("max_new_tokens", 16)),
+                    float(v.get("temperature", 0.0)),
+                ))
+                n += 1
+            except (ValueError, KeyError, TypeError) as e:
+                uid = v.get("uid", "?") if isinstance(v, dict) else "?"
+                self.rejections.append((str(uid), str(e)))
+                self.stats["rejected"] += 1
+            bus.commit(topic, group, m.offset + 1)
+        return n
+
+    def drain_rejections(self) -> list[tuple[str, str]]:
+        out, self.rejections = self.rejections, []
+        return out
+
+    def _bucket(self, plen: int) -> int:
+        b = 16
+        while b < plen:
+            b *= 2
+        return min(b, max(self.max_len - self.nf, 1))
+
+    def _prefill_fn(self, bucket: int):
+        """ONE dispatch per admission: prefill forward + page scatter + first
+        token sample, jitted per prompt-length bucket."""
+        if bucket not in self._prefill_fns:
+            s_total = self.nf + bucket
+
+            def fn(params, batch, idx, k_pages, v_pages, row, valid_len,
+                   temp, tick):
+                cache, logits = self.model.prefill(
+                    params, batch, s_total, logits_index=idx
+                )
+                k_pages, v_pages = write_prefill_pages(
+                    k_pages, v_pages, cache["k"][:, 0], cache["v"][:, 0],
+                    row, valid_len,
+                )
+                key = jax.random.fold_in(self._base_key, tick)
+                tok = _sample_rows(logits, temp[None], key, self.cfg.vocab_size)
+                return k_pages, v_pages, tok[0]
+
+            self._prefill_fns[bucket] = jax.jit(fn, donate_argnums=(3, 4))
+        return self._prefill_fns[bucket]
+
+    def _admit(self) -> int:
+        admitted = 0
+        while self.waiting:
+            req = self.waiting[0]
+            plen = len(req.prompt)
+            ctx = self.nf + plen
+            if not self.cache.can_admit(ctx):
+                break
+            self.waiting.popleft()
+            slot = self.cache.admit(ctx)
+
+            bucket = self._bucket(plen)
+            toks = np.zeros((1, bucket), np.int32)
+            toks[0, :plen] = req.prompt
+            batch = {"tokens": jnp.asarray(toks)}
+            if self.cfg.family == "vlm":
+                batch["vision_embeds"] = jnp.zeros(
+                    (1, self.nf, self.cfg.d_model), jnp.dtype(self.cfg.dtype)
+                )
+            self._ticks += 1
+            k_pages, v_pages, tok = self._prefill_fn(bucket)(
+                self.params, batch, jnp.asarray(ctx - 1, jnp.int32),
+                self.cache.k_pages, self.cache.v_pages,
+                self.cache.device_row(slot),
+                jnp.asarray(ctx, jnp.int32),
+                jnp.asarray(req.temperature, jnp.float32),
+                self._ticks,
+            )
+            self.cache.set_pages(k_pages, v_pages)
+            self.stats["prefills"] += 1
+
+            tok = int(tok)
+            self.stats["tokens"] += 1
+            self._admit_counter += 1
+            seq = _Seq(req, [tok], order=self._admit_counter)
+            if req.max_new_tokens <= 1:
+                self._done.append(Result(req.uid, seq.tokens))
+                self.cache.release(slot)
+            else:
+                self._slots[slot] = seq
+            self._dirty = True
+            admitted += 1
+        return admitted
+
+    def _preempt(self, slot: int) -> None:
+        """Evict a sequence and requeue its request (regenerated from
+        scratch later) to free pages under pool pressure."""
+        seq = self._slots.pop(slot)
+        self.cache.release(slot)
+        self.waiting.appendleft(seq.request)
+        self.stats["preemptions"] += 1
+        self._dirty = True
+
+    def _ensure_capacity(self) -> None:
+        """Give every in-flight slot a page for its next position, preempting
+        the youngest sequences if the pool runs dry. A lone sequence can
+        always grow (enqueue rejects requests that exceed the whole pool),
+        so this terminates with at least one slot making progress."""
+        for slot in sorted(self._slots, key=lambda s: self._slots[s].order):
+            while slot in self._slots:
+                try:
+                    if self.cache.ensure_append_capacity(slot):
+                        self._dirty = True
+                    break
+                except RuntimeError:
+                    victim = max(self._slots, key=lambda s: self._slots[s].order)
+                    self._preempt(victim)
+
+    # ------------------------------------------------------------------
+    # stepping
+    # ------------------------------------------------------------------
+    @property
+    def idle(self) -> bool:
+        return not (self.waiting or self._slots or self._done)
+
+    def step(self) -> list[Result]:
+        """Admit, run one decode step over all in-flight slots, evict
+        finished sequences. Returns the requests that completed."""
+        self._admit()
+        finished, self._done = self._done, []
+        if not self._slots:
+            return finished
+
+        self._ensure_capacity()
+        if self._dirty:  # admission/eviction/page-growth: refresh mirrors
+            tokens = np.zeros((self.max_slots, 1), np.int32)
+            temps = np.zeros((self.max_slots,), np.float32)
+            active = np.zeros((self.max_slots,), np.int32)
+            for slot, seq in self._slots.items():
+                tokens[slot, 0] = seq.tokens[-1]
+                temps[slot] = seq.request.temperature
+                active[slot] = 1
+            self._bt_dev, self._lens_dev = self.cache.device_tables()
+            self._active_dev = jnp.asarray(active)
+            self._toks_dev = jnp.asarray(tokens)
+            self._temps_dev = jnp.asarray(temps)
+            self._dirty = False
+        pages = {"k": self.cache.k_pages, "v": self.cache.v_pages}
+        self._ticks += 1
+        pages, self._toks_dev, self._lens_dev = self._decode(
+            self.params, pages, self._bt_dev, self._lens_dev,
+            self._active_dev, self._toks_dev, self._temps_dev, self._ticks,
+        )
+        self.cache.set_pages(pages["k"], pages["v"])
+        self.stats["decode_steps"] += 1
+        toks = np.asarray(self._toks_dev)[:, 0]
+        for slot in list(self._slots):
+            seq = self._slots[slot]
+            self.cache.append(slot)
+            seq.tokens.append(int(toks[slot]))
+            self.stats["tokens"] += 1
+            if len(seq.tokens) >= seq.request.max_new_tokens:
+                finished.append(Result(seq.request.uid, seq.tokens))
+                self.cache.release(slot)
+                del self._slots[slot]
+                self._dirty = True
+        return finished
+
+    def generate(self, requests: list[Request]) -> list[Result]:
+        """Drain a request list through the continuous batcher; results come
+        back in submission order."""
+        for r in requests:
+            self.enqueue(r)
+        done: dict[str, Result] = {}
+        while not self.idle:
+            for res in self.step():
+                done[res.uid] = res
+        return [done[r.uid] for r in requests]

@@ -1,0 +1,199 @@
+"""Block-table KV cache: fixed-size pages allocated from a shared pool.
+
+The device side is two arrays per model — ``k_pages``/``v_pages`` of shape
+(L, P, page_size, KVH, Dh) — plus per-step int32 inputs (block tables and
+lengths), so the jitted decode step sees ONE static shape no matter how many
+sequences are in flight or how long each one is. The host side is a free-list
+allocator (:class:`PagePool`) and per-slot bookkeeping (:class:`PagedKVCache`)
+that hands the engine ready-to-transfer block tables.
+
+Page 0 is reserved as the **null page**: unused block-table entries and idle
+decode slots point at it, so the kernel's gathers never go out of bounds and
+idle-slot writes land in a sink nobody reads (reads are masked by length).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NULL_PAGE = 0
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+class PagePool:
+    """LIFO free-list allocator over physical page ids [1, num_pages)."""
+
+    def __init__(self, num_pages: int):
+        assert num_pages >= 2, "need at least the null page + one real page"
+        self.num_pages = num_pages
+        # LIFO so recently-freed (cache-warm) pages are reused first
+        self._free = list(range(num_pages - 1, 0, -1))
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int = 1) -> list[int]:
+        """Pop n pages; raises RuntimeError when the pool is exhausted."""
+        assert n > 0, n  # n=0 would slice the whole free list without popping
+        if n > len(self._free):
+            raise RuntimeError(
+                f"KV page pool exhausted: want {n}, have {len(self._free)}"
+            )
+        taken = self._free[-n:][::-1]
+        del self._free[len(self._free) - n:]
+        return taken
+
+    def free(self, pages: list[int]) -> None:
+        for p in pages:
+            assert p != NULL_PAGE, "cannot free the null page"
+            self._free.append(p)
+
+
+class PagedKVCache:
+    """Device page pool + host block tables for up to ``max_slots`` sequences.
+
+    The engine owns the jitted functions; this class owns allocation state
+    and the current device arrays (which the engine swaps after each donated
+    decode/prefill-write call via :meth:`set_pages`).
+    """
+
+    def __init__(
+        self,
+        *,
+        num_layers: int,
+        num_kv_heads: int,
+        head_dim: int,
+        dtype,
+        max_slots: int,
+        max_context: int,
+        page_size: int = 16,
+        num_pages: int | None = None,
+    ):
+        self.page_size = page_size
+        self.max_slots = max_slots
+        self.max_pages_per_seq = cdiv(max_context, page_size)
+        if num_pages is None:  # worst case: every slot at max context, + null
+            num_pages = max_slots * self.max_pages_per_seq + 1
+        self.num_pages = num_pages
+        shape = (num_layers, num_pages, page_size, num_kv_heads, head_dim)
+        self.k_pages = jnp.zeros(shape, dtype)
+        self.v_pages = jnp.zeros(shape, dtype)
+
+        self.pool = PagePool(num_pages)
+        self.block_tables = np.full(
+            (max_slots, self.max_pages_per_seq), NULL_PAGE, np.int32
+        )
+        self.lengths = np.zeros((max_slots,), np.int32)
+        self._slot_pages: list[list[int]] = [[] for _ in range(max_slots)]
+        self._free_slots = list(range(max_slots - 1, -1, -1))
+
+    # ------------------------------------------------------------------
+    # slots
+    # ------------------------------------------------------------------
+    @property
+    def free_slot_count(self) -> int:
+        return len(self._free_slots)
+
+    def can_admit(self, context_len: int) -> bool:
+        return (
+            bool(self._free_slots)
+            and self.pool.available >= cdiv(max(context_len, 1), self.page_size)
+        )
+
+    def admit(self, context_len: int) -> int:
+        """Claim a slot and pages for an initial context of ``context_len``."""
+        assert context_len <= self.max_pages_per_seq * self.page_size, (
+            context_len, self.max_pages_per_seq * self.page_size)
+        slot = self._free_slots.pop()
+        pages = self.pool.alloc(cdiv(max(context_len, 1), self.page_size))
+        self._slot_pages[slot] = pages
+        self.block_tables[slot] = NULL_PAGE
+        self.block_tables[slot, : len(pages)] = pages
+        self.lengths[slot] = context_len
+        return slot
+
+    def ensure_append_capacity(self, slot: int) -> bool:
+        """Make sure position ``lengths[slot]`` has a page before a decode
+        step writes there (on-demand growth at page boundaries). Returns
+        True when a page was allocated (the block table changed); raises
+        RuntimeError when the pool is exhausted (callers may preempt)."""
+        need = int(self.lengths[slot]) // self.page_size
+        pages = self._slot_pages[slot]
+        if need == len(pages):
+            (new,) = self.pool.alloc(1)
+            pages.append(new)
+            self.block_tables[slot, need] = new
+            return True
+        return False
+
+    def append(self, slot: int) -> None:
+        """Record that the decode step wrote one token for this slot."""
+        self.lengths[slot] += 1
+
+    def release(self, slot: int) -> None:
+        self.pool.free(self._slot_pages[slot])
+        self._slot_pages[slot] = []
+        self.block_tables[slot] = NULL_PAGE
+        self.lengths[slot] = 0
+        self._free_slots.append(slot)
+
+    # ------------------------------------------------------------------
+    # device views
+    # ------------------------------------------------------------------
+    def device_tables(self) -> tuple[jax.Array, jax.Array]:
+        """Device copies of (block_tables, lengths).
+
+        MUST copy: ``jnp.asarray`` may alias (or lazily transfer) the host
+        numpy buffer, and these arrays are mutated in place between decode
+        steps — an aliased buffer races with async device reads and shows up
+        as stale block tables / lengths (observed on the CPU backend as
+        dropped KV writes and off-by-one attention masks).
+        """
+        return jnp.asarray(self.block_tables.copy()), jnp.asarray(self.lengths.copy())
+
+    def device_row(self, slot: int) -> jax.Array:
+        """Device copy of one slot's block-table row (same aliasing rule)."""
+        return jnp.asarray(self.block_tables[slot].copy())
+
+    def set_pages(self, k_pages: jax.Array, v_pages: jax.Array) -> None:
+        self.k_pages, self.v_pages = k_pages, v_pages
+
+    def gather_dense(self, slot: int) -> tuple[np.ndarray, np.ndarray]:
+        """Reassemble a slot's K/V as dense (L, len, KVH, Dh) — tests only."""
+        k = np.asarray(self.k_pages)
+        v = np.asarray(self.v_pages)
+        n = int(self.lengths[slot])
+        pages = self._slot_pages[slot]
+        out_k = np.concatenate([k[:, p] for p in pages], axis=1)[:, :n]
+        out_v = np.concatenate([v[:, p] for p in pages], axis=1)[:, :n]
+        return out_k, out_v
+
+
+def write_prefill_pages(
+    k_pages: jax.Array,   # (L, P, page, KVH, Dh) — donated by the caller's jit
+    v_pages: jax.Array,
+    k_new: jax.Array,     # (L, S, KVH, Dh) dense prefill K (S may be padded)
+    v_new: jax.Array,
+    table_row: jax.Array,  # (MP,) int32 physical page per logical page
+    valid_len: jax.Array,  # scalar int32: positions < valid_len are real
+) -> tuple[jax.Array, jax.Array]:
+    """Scatter one sequence's dense prefill K/V into its pages.
+
+    Padded positions (>= valid_len) are routed out of bounds and dropped —
+    bucketed prompt padding never lands anywhere, and every surviving
+    scatter index is unique (duplicate-index scatter order is undefined).
+    """
+    num_pages, page = k_pages.shape[1:3]
+    s = k_new.shape[1]
+    pos = jnp.arange(s)
+    phys = jnp.where(pos < valid_len, table_row[pos // page], num_pages)
+    off = pos % page
+    k_pages = k_pages.at[:, phys, off].set(k_new, mode="drop")
+    v_pages = v_pages.at[:, phys, off].set(v_new, mode="drop")
+    return k_pages, v_pages
