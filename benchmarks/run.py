@@ -152,13 +152,29 @@ def bench_step(quick: bool):
     row("decode_step_reduced", us, f"tok_per_s={4/us*1e6:.0f}")
 
 
+def _latency_summary(results) -> str:
+    from repro.serving import format_latency
+
+    return format_latency(results)
+
+
+def _fresh(reqs):
+    """Fresh Request copies so repeated runs stay fully independent."""
+    from repro.serving.engine import Request
+
+    return [Request(r.uid, list(r.prompt), r.max_new_tokens, r.temperature)
+            for r in reqs]
+
+
 def bench_serving(quick: bool):
     """Continuous batching vs lockstep on a mixed-length trace (tokens/sec).
 
     Trace: prompts 8-128 tokens, max_new 4-64 — the regime where lockstep
     collapses (every batch pads to the longest prompt and decodes for the
     slowest request). Both engines are warmed on the trace first so the
-    comparison is steady-state, not compile time.
+    comparison is steady-state, not compile time. The paged row also
+    reports TTFT / inter-token latency percentiles (requests carry
+    arrival timestamps through the engine).
     """
     import jax
 
@@ -192,29 +208,105 @@ def bench_serving(quick: bool):
 
     def run_lockstep(batch_size):
         for i in range(0, n, batch_size):
-            lockstep.generate(trace[i:i + batch_size])
+            lockstep.generate(_fresh(trace[i:i + batch_size]))
 
     def run_paged():
-        paged.generate(trace)
+        return paged.generate(_fresh(trace))
 
     def timed(fn):
         fn()  # warm: compile this path
         t0 = time.perf_counter()
-        fn()
-        return time.perf_counter() - t0
+        out = fn()
+        return time.perf_counter() - t0, out
 
     # the honest baseline runs at the SAME concurrency as the paged engine;
     # the small-batch row shows how lockstep degrades as padding/straggler
     # waste grows with batch width
-    lock_small_s = timed(lambda: run_lockstep(slots // 2))
-    lock_s = timed(lambda: run_lockstep(slots))
-    paged_s = timed(run_paged)
+    lock_small_s, _ = timed(lambda: run_lockstep(slots // 2))
+    lock_s, _ = timed(lambda: run_lockstep(slots))
+    paged_s, results = timed(run_paged)
 
     row(f"serve_lockstep_b{slots//2}", lock_small_s * 1e6,
         f"tok_per_s={useful/lock_small_s:.1f}")
     row(f"serve_lockstep_b{slots}", lock_s * 1e6, f"tok_per_s={useful/lock_s:.1f}")
     row("serve_paged", paged_s * 1e6,
         f"tok_per_s={useful/paged_s:.1f};speedup={lock_s/paged_s:.2f}x")
+    row("serve_paged_latency", paged_s * 1e6, _latency_summary(results))
+
+
+def bench_serving_shared_prefix(quick: bool):
+    """Chunked prefill + COW prefix sharing vs the PR-1 engine (whole-prompt
+    bucketed prefill, no sharing) on a shared-prefix trace — the
+    pipeline-rerun workload the paper motivates: every request repeats a
+    long common prompt prefix and adds a short novel suffix.
+
+    Two claims are quantified: (1) prefix sharing + chunking raises
+    tokens/sec on the same trace; (2) chunked prefill bounds the decode
+    stall — max inter-token latency stays near one chunk's cost instead of
+    a whole long prefill (compare itl_ms_max / itl_ms_p99 between rows).
+    """
+    import jax
+
+    from repro.configs import ARCHS, reduced
+    from repro.models import build_model
+    from repro.serving import ContinuousBatchingEngine
+    from repro.serving.engine import Request
+
+    cfg = reduced(ARCHS["smollm-360m"])
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+
+    rng = np.random.default_rng(1)
+    n = 8 if quick else 24
+    prefix = list(rng.integers(1, cfg.vocab_size, 96))
+    trace = [
+        Request(
+            f"s{i}",
+            prefix + list(rng.integers(1, cfg.vocab_size, rng.integers(4, 33))),
+            max_new_tokens=int(rng.integers(8, 33)),
+        )
+        for i in range(n)
+    ]
+    useful = sum(r.max_new_tokens for r in trace)
+    max_len = 96 + 32 + 32
+    slots = 8
+
+    pr1 = ContinuousBatchingEngine(      # PR-1 behaviour
+        cfg, params, max_len=max_len, max_slots=slots, page_size=16,
+        prefill_chunk=None, prefix_sharing=False,
+    )
+    new = ContinuousBatchingEngine(      # this PR: chunked + COW sharing
+        cfg, params, max_len=max_len, max_slots=slots, page_size=16,
+        prefill_chunk=32, prefix_sharing=True,
+    )
+
+    def one_run(engine):
+        for k in engine.cache.stats:    # stats describe this run only
+            engine.cache.stats[k] = 0
+        t0 = time.perf_counter()
+        out = engine.generate(_fresh(trace))
+        return time.perf_counter() - t0, out, dict(engine.cache.stats)
+
+    pr1.generate(_fresh(trace))  # warm: compile each path
+    new.generate(_fresh(trace))
+    # background load on shared CPU swings >2x between runs; alternate the
+    # engines and take each one's best so drift doesn't pick the winner
+    pr1_s, pr1_res, _ = one_run(pr1)
+    new_s, new_res, new_stats = one_run(new)
+    for _ in range(2):
+        s, r, _ = one_run(pr1)
+        if s < pr1_s:
+            pr1_s, pr1_res = s, r
+        s, r, st = one_run(new)
+        if s < new_s:
+            new_s, new_res, new_stats = s, r, st
+
+    row("serve_sharedprefix_pr1", pr1_s * 1e6,
+        f"tok_per_s={useful/pr1_s:.1f};{_latency_summary(pr1_res)}")
+    reused = new_stats["prefix_tokens_reused"]
+    row("serve_sharedprefix_cow", new_s * 1e6,
+        f"tok_per_s={useful/new_s:.1f};speedup={pr1_s/new_s:.2f}x;"
+        f"prefix_tokens_reused={reused};{_latency_summary(new_res)}")
 
 
 def bench_kernels(quick: bool):
@@ -312,7 +404,7 @@ def main() -> None:
     t0 = time.time()
     for bench in (bench_split, bench_bus, bench_storage, bench_ckpt,
                   bench_kernels, bench_recovery, bench_scaling, bench_step,
-                  bench_serving):
+                  bench_serving, bench_serving_shared_prefix):
         bench(args.quick)
     print(f"# total {time.time()-t0:.0f}s")
     out = Path("experiments")

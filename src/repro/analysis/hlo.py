@@ -188,12 +188,31 @@ def _trip_count(cond: _Computation) -> int:
     return max(best, 1)
 
 
+def _split_args(s: str) -> list[str]:
+    """Split an operand list at top-level commas only — commas inside
+    brackets/braces/parens (shape dims, layout annotations like
+    ``f32[64,128]{1,0}``, nested tuples) don't separate operands."""
+    out, cur, depth = [], [], 0
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    tail = "".join(cur).strip()
+    if tail:
+        out.append(tail)
+    return out
+
+
 def _operand_types(op: _Op, comp: _Computation) -> list[str]:
     """Types of an op's operands (inline-typed or via the symbol table)."""
     out = []
-    # split args at top level (no nested parens in operand lists normally)
-    args = [a.strip() for a in re.split(r",(?![^(]*\))", op.args_str) if a.strip()]
-    for a in args:
+    for a in _split_args(op.args_str):
         m = re.match(r"^([a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?)\s+%?[\w.\-]+$", a)
         if m:
             out.append(m.group(1))

@@ -135,8 +135,15 @@ class WorkflowScheduler:
                 if not all(self._state[d].done for d in deps):
                     continue
 
+                # snapshot each pod's state ONCE per iteration: state is a
+                # live property, and a pod finishing between two reads must
+                # not be miscounted (a fast hedge dying between the winner
+                # check and the running-pod count triggered a spurious
+                # second hedge)
+                states = [(p, p.state) for p in st.pods]
+
                 # 1) harvest — first success wins (idempotent record)
-                winner = next((p for p in st.pods if p.state == "succeeded"), None)
+                winner = next((p for p, s in states if s == "succeeded"), None)
                 if winner is not None:
                     for p in st.pods:
                         if p is not winner and p.is_alive():
@@ -160,12 +167,12 @@ class WorkflowScheduler:
                     continue
 
                 # 2) liveness: kill zombie attempts whose heartbeats stopped
-                for p in st.pods:
-                    if p.state == "running" and self.monitor.status(p.pod_name) == "dead":
+                for p, s in states:
+                    if s == "running" and self.monitor.status(p.pod_name) == "dead":
                         p.kill_switch.kill("liveness_probe_failed")
                         self.events.emit("pod_liveness_kill", name, p.attempt)
 
-                running_pods = [p for p in st.pods if p.state in ("running", "pending")]
+                running_pods = [p for p, s in states if s in ("running", "pending")]
                 if running_pods:
                     # straggler hedging: one extra speculative attempt
                     if (

@@ -1,5 +1,10 @@
 """jit'd public wrappers around the Pallas kernels with XLA fallbacks.
 
+Ops: ``flash_attention`` (train/prefill), ``paged_attention`` (single-token
+decode over the serving page pool), ``paged_prefill_attention`` (chunked
+prefill over the page pool; XLA-only so far), ``ssd_scan`` / ``ssd_decode_step``
+(Mamba2).
+
 ``impl`` selection:
   * "pallas"      — the Pallas TPU kernel (pass ``interpret=True`` on CPU).
   * "xla_chunked" — pure-jnp chunked implementations from ``ref.py``
@@ -7,6 +12,10 @@
                     this repo since the container has no TPU).
   * "naive"       — full-matrix references (tests/small inputs only).
   * "auto"        — "pallas" on TPU backends, else "xla_chunked".
+
+Contract: for every op the ``ref.py`` implementation is the ground truth;
+kernels must match it within the tolerance asserted in ``tests/`` (paged
+decode: 1e-3 max abs error in interpret mode, observed ~1e-7).
 """
 
 from __future__ import annotations
@@ -98,6 +107,32 @@ def paged_attention(
         )
         return out.reshape(b, h, d)
     raise ValueError(f"unknown paged attention impl {impl!r}")
+
+
+def paged_prefill_attention(
+    q: jax.Array,            # (C, H, D) one prefill chunk of ONE sequence
+    k_pages: jax.Array,      # (P, page, KVH, D) shared page pool
+    v_pages: jax.Array,
+    block_table: jax.Array,  # (MP,) int32 the sequence's block-table row
+    start: jax.Array,        # scalar int32: positions already cached
+    valid: jax.Array,        # scalar int32: real tokens in this chunk
+    *,
+    scale: float | None = None,
+    impl: str = "auto",
+) -> jax.Array:
+    """Chunked-prefill attention over a paged KV cache. Returns (C, H, D).
+
+    The chunk's own K/V must already be scattered into the pages. There is
+    no Pallas chunk-prefill kernel yet (ROADMAP open item), so every impl —
+    including "pallas"/"auto" on TPU — lowers to the XLA reference; the
+    signature mirrors :func:`paged_attention` so the kernel can slot in
+    without touching callers.
+    """
+    if impl not in ("auto", "naive", "xla_chunked", "pallas"):
+        raise ValueError(f"unknown paged prefill impl {impl!r}")
+    return ref.paged_prefill_attention_ref(
+        q, k_pages, v_pages, block_table, start, valid, scale=scale
+    )
 
 
 # ---------------------------------------------------------------------------

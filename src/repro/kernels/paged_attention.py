@@ -1,9 +1,14 @@
 """Paged attention decode as a Pallas TPU kernel.
 
-One query token per sequence attends over K/V stored in a shared page pool
-(`kv_cache.PagedKVCache` layout): pages are gathered *inside the grid* via a
-scalar-prefetched block table, so sequences of wildly different lengths share
-one decode batch with zero re-padding and no dense gather in HBM.
+DECODE path only: one query token per sequence attends over K/V stored in a
+shared page pool (`kv_cache.PagedKVCache` layout): pages are gathered
+*inside the grid* via a scalar-prefetched block table, so sequences of
+wildly different lengths share one decode batch with zero re-padding and no
+dense gather in HBM. (Chunked prefill — multiple query tokens per sequence —
+runs through the XLA reference ``ref.paged_prefill_attention_ref``; a Pallas
+chunk-prefill kernel is a ROADMAP open item.) Oracle: ``ref.paged_attention_ref``
+— identical masking/normalization conventions, idle (length-0) slots return
+exact zeros, never NaN.
 
 Grid: (batch, kv-head, logical-page) with the page dimension innermost — TPU
 grid steps are sequential, so the online-softmax state (acc, m, l) lives in

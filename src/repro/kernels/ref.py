@@ -4,12 +4,21 @@ These are the correctness ground truth (tests sweep shapes/dtypes and
 ``assert_allclose`` kernel vs. ref) AND the XLA fallback implementation the
 models use on non-TPU backends.
 
-* ``flash_attention_ref``     — naive full-matrix attention (small inputs only).
-* ``flash_attention_chunked`` — online-softmax over KV chunks (bounded memory;
-  what the models lower on XLA; numerically equal to naive).
-* ``ssd_sequential``          — Mamba2 SSD as the literal per-token recurrence.
-* ``ssd_chunked``             — the SSD block-decomposition (Dao & Gu 2024),
-  matches ``ssd_sequential``; what the models lower on XLA.
+* ``flash_attention_ref``         — naive full-matrix attention (small inputs
+  only).
+* ``flash_attention_chunked``     — online-softmax over KV chunks (bounded
+  memory; what the models lower on XLA; numerically equal to naive).
+* ``paged_attention_ref``         — single-token decode over a block-table
+  page pool; oracle for ``paged_attention.py`` and the XLA decode path of
+  the continuous-batching engine. Idle slots (length 0) yield zeros.
+* ``paged_prefill_attention_ref`` — chunked prefill: a chunk of C queries of
+  one sequence over its paged prefix + itself (causal). The C=1 case
+  degenerates to ``paged_attention_ref``; only XLA path so far (a Pallas
+  chunk-prefill kernel is a ROADMAP open item).
+* ``ssd_sequential``              — Mamba2 SSD as the literal per-token
+  recurrence.
+* ``ssd_chunked``                 — the SSD block-decomposition (Dao & Gu
+  2024), matches ``ssd_sequential``; what the models lower on XLA.
 """
 
 from __future__ import annotations
@@ -160,6 +169,52 @@ def paged_attention_ref(
     out = jnp.einsum("bkgs,bskd->bkgd", p / jnp.maximum(l, 1e-30),
                      vals.astype(jnp.float32))
     return out.reshape(b, h, d).astype(q.dtype)
+
+
+def paged_prefill_attention_ref(
+    q: jax.Array,            # (C, H, D) one chunk of queries for ONE sequence
+    k_pages: jax.Array,      # (P, page, KVH, D) shared page pool
+    v_pages: jax.Array,
+    block_table: jax.Array,  # (MP,) int32 the sequence's block-table row
+    start: jax.Array,        # scalar int32: positions already cached
+    valid: jax.Array,        # scalar int32: real (non-padded) chunk tokens
+    *,
+    scale: float | None = None,
+) -> jax.Array:
+    """Chunked-prefill oracle: chunk queries over the paged prefix + chunk.
+
+    Query i (absolute position start+i) attends to every cached position
+    <= start+i, read through the block table — the chunk's own K/V must
+    already be scattered into the pages (``attention`` does the scatter
+    before calling this). Padded queries (i >= valid) return zeros. The
+    masked-softmax convention matches :func:`paged_attention_ref`, of which
+    this is the multi-query generalization (that kernel is the C=1 case).
+    Returns (C, H, D) in q.dtype.
+    """
+    c, h, d = q.shape
+    _, page, kvh, _ = k_pages.shape
+    mp = block_table.shape[0]
+    group = h // kvh
+    scale = scale if scale is not None else d ** -0.5
+
+    keys = k_pages[block_table].reshape(mp * page, kvh, d)
+    vals = v_pages[block_table].reshape(mp * page, kvh, d)
+
+    qg = q.reshape(c, kvh, group, d).astype(jnp.float32) * scale
+    scores = jnp.einsum(
+        "ckgd,skd->ckgs", qg, keys.astype(jnp.float32)
+    )  # (C, KVH, G, MP*page)
+    kpos = jnp.arange(mp * page)[None, :]
+    qpos = start + jnp.arange(c)[:, None]
+    ok = (kpos <= qpos) & (jnp.arange(c)[:, None] < valid)  # (C, S)
+    scores = jnp.where(ok[:, None, None, :], scores, NEG_INF)
+    # explicit normalization (not jax.nn.softmax) so an all-masked row gives 0
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m) * ok[:, None, None, :]
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("ckgs,skd->ckgd", p / jnp.maximum(l, 1e-30),
+                     vals.astype(jnp.float32))
+    return out.reshape(c, h, d).astype(q.dtype)
 
 
 # ---------------------------------------------------------------------------

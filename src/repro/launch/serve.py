@@ -2,14 +2,19 @@
 
 Requests land on the ``requests`` topic (Kafka analogue); engine workers
 admit them straight into in-flight decode slots (paged KV cache, one static
-decode shape — see ``serving/engine.py``) and publish to ``responses``. The
-HPA analogue watches consumer lag and scales workers in [min,max]. The old
-lockstep micro-batcher stays available via ``--engine lockstep`` (and is the
-fallback for families without a paged decode path). CPU-runnable with
-reduced configs:
+decode shape — see ``serving/engine.py``) and publish to ``responses``.
+Prompts prefill in fixed-size chunks interleaved with decode
+(``--prefill-chunk``, 0 restores whole-prompt prefill) and identical prompt
+prefixes are served from shared copy-on-write pages (``--no-prefix-sharing``
+to disable; ``--shared-prefix N`` synthesizes the pipeline-rerun workload
+that exercises it). The run prints p50/p90/p99 time-to-first-token and
+inter-token latency. The HPA analogue watches consumer lag and scales
+workers in [min,max]. The old lockstep micro-batcher stays available via
+``--engine lockstep`` (and is the fallback for families without a paged
+decode path). CPU-runnable with reduced configs:
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --reduced \
-      --requests 24
+      --requests 24 --shared-prefix 32
 """
 
 from __future__ import annotations
@@ -31,6 +36,14 @@ def main() -> int:
     ap.add_argument("--max-batch", type=int, default=4,
                     help="lockstep micro-batch size / paged slot count")
     ap.add_argument("--engine", choices=["paged", "lockstep"], default="paged")
+    ap.add_argument("--prefill-chunk", type=int, default=64,
+                    help="paged engine: prefill chunk size; 0 restores the "
+                         "whole-prompt bucketed prefill")
+    ap.add_argument("--no-prefix-sharing", action="store_true",
+                    help="paged engine: disable COW prefix-page sharing")
+    ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
+                    help="prepend a common N-token prefix to every request "
+                         "(pipeline-rerun workload; exercises prefix sharing)")
     ap.add_argument("--workdir", default="experiments/serve_run")
     args = ap.parse_args()
 
@@ -57,13 +70,15 @@ def main() -> int:
 
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
-    max_len = 64 + args.max_new
+    shared = list(range(2, 2 + args.shared_prefix))
+    max_len = 64 + args.shared_prefix + args.max_new
 
     # ---- producer: enqueue requests ----
     for i in range(args.requests):
         bus.publish(
             "requests",
-            {"uid": f"r{i}", "prompt": [1 + (i % 30), 2, 3 + (i % 7)],
+            {"uid": f"r{i}",
+             "prompt": shared + [1 + (i % 30), 2, 3 + (i % 7)],
              "max_new_tokens": args.max_new},
         )
 
@@ -75,6 +90,7 @@ def main() -> int:
         events=events,
     )
     done: dict[str, list[int]] = {}
+    latencies: list = []  # Result objects, for TTFT/ITL percentiles
     lock = threading.Lock()
 
     def publish(results):
@@ -82,10 +98,13 @@ def main() -> int:
             bus.publish("responses", {"uid": r.uid, "tokens": r.tokens})
             with lock:
                 done[r.uid] = r.tokens
+                latencies.append(r)
 
     def paged_worker(wid: int, stop: threading.Event):
         engine = ContinuousBatchingEngine(
-            cfg, params, max_len=max_len, max_slots=max(args.max_batch, 2)
+            cfg, params, max_len=max_len, max_slots=max(args.max_batch, 2),
+            prefill_chunk=args.prefill_chunk or None,
+            prefix_sharing=not args.no_prefix_sharing,
         )
         registry.register("generate", f"pod://server-{wid}", f"server-{wid}")
         while not stop.is_set():
@@ -146,6 +165,11 @@ def main() -> int:
           f"({len(done)*args.max_new/wall:.1f} tok/s), "
           f"engine={'paged' if use_paged else 'lockstep'}, "
           f"peak workers={len(threads)}")
+    from repro.serving import format_latency
+
+    summary = format_latency(latencies)
+    if summary != "no_latency_data":  # paged engine records per-request latency
+        print(summary)
     autoscales = events.history("autoscale")
     print("autoscale events:", [(e["old"], e["new"]) for e in autoscales])
     assert len(done) == args.requests

@@ -175,6 +175,46 @@ def decode_self_attention_paged(
     return o, {"k": kc, "v": vc}
 
 
+def prefill_chunk_attention_paged(
+    p: dict,
+    x: jax.Array,            # (1, C, D) one chunk of ONE sequence's prompt
+    layer_pages: dict,       # {"k": (P,page,KVH,Dh), "v": ...} this layer's pool
+    block_table: jax.Array,  # (MP,) int32 the sequence's block-table row
+    start: jax.Array,        # scalar int32: positions already in the pages
+    valid: jax.Array,        # scalar int32: real (non-padded) chunk tokens
+    cfg: ModelConfig,
+    *,
+    rope: bool = True,
+    attn_impl: str = "xla_chunked",
+) -> tuple[jax.Array, dict]:
+    """Chunked prefill: scatter the chunk's K/V into the sequence's pages,
+    then attend each chunk position over the paged prefix + the chunk itself
+    (causal). RoPE uses absolute positions ``start + i``, so a chunk never
+    knows (or re-pads to) the full prompt length. Padded positions
+    (>= valid) write out of bounds (dropped) and return garbage outputs the
+    caller discards."""
+    c = x.shape[1]
+    positions = start + jnp.arange(c)
+    q, k, v = _project_qkv(p, x, cfg, positions, rope)
+    num_pages, page = layer_pages["k"].shape[:2]
+    phys = jnp.where(
+        jnp.arange(c) < valid, block_table[positions // page], num_pages
+    )
+    off = positions % page
+    kc = layer_pages["k"].at[phys, off].set(
+        k[0].astype(layer_pages["k"].dtype), mode="drop"
+    )
+    vc = layer_pages["v"].at[phys, off].set(
+        v[0].astype(layer_pages["v"].dtype), mode="drop"
+    )
+    out = ops.paged_prefill_attention(
+        q[0], kc, vc, block_table, start, valid,
+        scale=cfg.head_dim ** -0.5, impl=attn_impl,
+    ).astype(x.dtype)  # (C, H, Dh)
+    o = jnp.einsum("chk,hkd->cd", out, p["wo"])[None]
+    return o, {"k": kc, "v": vc}
+
+
 def cross_attention(
     p: dict,
     x: jax.Array,          # (B, Sq, D) decoder states
@@ -197,11 +237,17 @@ def cross_attention_kv(p: dict, enc: jax.Array) -> tuple[jax.Array, jax.Array]:
     return k, v
 
 
-def decode_cross_attention(p, x, kv, cfg: ModelConfig):
-    """One-token cross attention over full precomputed encoder K/V."""
+def decode_cross_attention(p, x, kv, cfg: ModelConfig, enc_len=None):
+    """One-token cross attention over precomputed encoder K/V.
+
+    ``enc_len`` (scalar int32) masks K/V that was zero-padded past the true
+    encoder length (the serving cache pads to max_len) — attending over the
+    pad would pollute the softmax and diverge from the prefill path. None
+    means the K/V is unpadded (use its full length)."""
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
     k, v = kv
+    n = jnp.asarray(k.shape[1], jnp.int32) if enc_len is None else enc_len
     out = decode_attention_raw(
-        q, k, v, jnp.asarray(k.shape[1], jnp.int32), cfg.head_dim ** -0.5
+        q, k, v, n, cfg.head_dim ** -0.5
     ).astype(x.dtype)
     return jnp.einsum("bshk,hkd->bsd", out, p["wo"])

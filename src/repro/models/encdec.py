@@ -152,6 +152,7 @@ class EncDecLM:
             "xk": arr(kv, dt),
             "xv": arr(kv, dt),
             "pos": arr((), jnp.int32),
+            "enc_len": arr((), jnp.int32),  # true (unpadded) encoder length
         }
 
     def init_cache(self, batch, max_len):
@@ -162,7 +163,8 @@ class EncDecLM:
 
     def cache_axes(self):
         kv = ("stack", "cache_batch", "cache_seq", "kv_heads", "head_dim")
-        return {"k": kv, "v": kv, "xk": kv, "xv": kv, "pos": None}
+        return {"k": kv, "v": kv, "xk": kv, "xv": kv, "pos": None,
+                "enc_len": None}
 
     def prefill(self, params, batch, max_len: int):
         """Encode frames, prefill decoder with the given tokens."""
@@ -199,7 +201,8 @@ class EncDecLM:
             }
 
         x, kv = jax.lax.scan(body, x, params["decoder"])
-        cache = {**kv, "pos": jnp.asarray(s, jnp.int32)}
+        cache = {**kv, "pos": jnp.asarray(s, jnp.int32),
+                 "enc_len": jnp.asarray(enc.shape[1], jnp.int32)}
         x = rms_norm(x[:, -1:, :], params["final_norm"], cfg.norm_eps)
         logits = jnp.einsum(
             "bsd,dv->bsv", x, params["unembed"], preferred_element_type=jnp.float32
@@ -221,7 +224,11 @@ class EncDecLM:
             )
             x = x + h
             h = rms_norm(x, pl["ln_x"], cfg.norm_eps)
-            h = attn.decode_cross_attention(pl["xattn"], h, (cl["xk"], cl["xv"]), cfg)
+            # xk/xv are zero-padded to max_len: mask to the true enc length
+            h = attn.decode_cross_attention(
+                pl["xattn"], h, (cl["xk"], cl["xv"]), cfg,
+                enc_len=cache["enc_len"],
+            )
             x = x + h
             h = rms_norm(x, pl["ln2"], cfg.norm_eps)
             h = swiglu(h, pl["mlp"]["w_gate"], pl["mlp"]["w_up"], pl["mlp"]["w_down"])
@@ -229,7 +236,7 @@ class EncDecLM:
 
         layer_caches = {k: cache[k] for k in ("k", "v", "xk", "xv")}
         x, kv = jax.lax.scan(body, x, (params["decoder"], layer_caches))
-        new_cache = {**kv, "pos": pos + 1}
+        new_cache = {**kv, "pos": pos + 1, "enc_len": cache["enc_len"]}
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
         logits = jnp.einsum(
             "bsd,dv->bsv", x, params["unembed"], preferred_element_type=jnp.float32

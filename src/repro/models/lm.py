@@ -1,9 +1,13 @@
 """Unified decoder-only LM covering dense / moe / vlm / ssm / hybrid families.
 
-One class, three lowered entry points:
+One class, five lowered entry points:
   * ``loss_fn(params, batch)``       — training forward + chunked CE loss
   * ``prefill(params, batch, max_len)`` — full-seq forward, returns KV/SSM cache
   * ``decode_step(params, cache, tokens)`` — one token with cache update
+  * ``decode_step_paged(params, pages, ...)`` — one token per serving slot
+    against the shared paged KV pool (continuous batching)
+  * ``prefill_chunk(params, pages, ...)`` — one fixed-size prompt chunk of
+    one sequence scattered into its page set (chunked prefill)
 
 The layer stack is a ``lax.scan`` over stacked per-layer params (compile time
 O(1) in depth) with configurable ``jax.checkpoint`` policy. Vocab is padded to
@@ -642,4 +646,55 @@ class DecoderLM:
             "bsd,dv->bsv", x, self._unembed_weight(params),
             preferred_element_type=jnp.float32,
         )[:, 0]
+        return new_pages, logits
+
+    # ------------------------------------------------------------------
+    # chunked prefill (continuous batching)
+    # ------------------------------------------------------------------
+    def prefill_chunk(self, params, pages, block_table, tokens, start, valid):
+        """One fixed-size prefill chunk of ONE sequence, scattered into its
+        existing page set.
+
+        pages: {"k": (L,P,page,KVH,Dh), "v": ...} — the shared page pool.
+        block_table (MP,) int32 is the sequence's row; tokens (C,) int32 is
+        the chunk (C static — one compile covers every prompt); start
+        (scalar int32) is how many positions are already resident (shared
+        prefix pages + earlier chunks); valid (scalar int32) is the number
+        of real tokens in this possibly-padded chunk.
+
+        Returns (new_pages, logits (Vp,) f32) where logits belong to chunk
+        position ``valid - 1`` — meaningful on the prompt's final chunk
+        (the first sampling position), garbage (and ignored) before that.
+        Token-embedding families only (dense/moe); vlm prompts carry vision
+        embeds and keep the whole-prompt bucketed prefill path.
+        """
+        cfg = self.cfg
+        assert cfg.family in ("dense", "moe"), cfg.family
+        x = jnp.take(params["embed"], tokens[None], axis=0)  # (1,C,D)
+
+        def body(x, inp):
+            pl, cl = inp
+            h = rms_norm(x, pl["ln1"], cfg.norm_eps)
+            h, new_cl = attn.prefill_chunk_attention_paged(
+                pl["attn"], h, cl, block_table, start, valid, cfg,
+                attn_impl=self.attn_impl,
+            )
+            x = x + h
+            h = rms_norm(x, pl["ln2"], cfg.norm_eps)
+            if cfg.family == "moe":
+                h, _ = moe_mod.moe_block(pl["moe"], h, cfg)
+            else:
+                h = swiglu(h, pl["mlp"]["w_gate"], pl["mlp"]["w_up"],
+                           pl["mlp"]["w_down"])
+            return x + h, new_cl
+
+        x, new_pages = jax.lax.scan(
+            body, x, (params["layers"], {"k": pages["k"], "v": pages["v"]})
+        )
+        x = jax.lax.dynamic_slice_in_dim(x, valid - 1, 1, axis=1)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum(
+            "bsd,dv->bsv", x, self._unembed_weight(params),
+            preferred_element_type=jnp.float32,
+        )[0, 0]
         return new_pages, logits

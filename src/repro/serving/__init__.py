@@ -1,3 +1,11 @@
+"""Serving layer: generation engines over a paged, prefix-shared KV cache.
+
+``GenerationEngine`` is the lockstep micro-batching baseline;
+``ContinuousBatchingEngine`` is the production path — continuous admission,
+chunked prefill interleaved with decode, and copy-on-write prefix sharing
+(see ``docs/serving.md`` for the full design).
+"""
+
 from repro.serving.engine import (
     ContinuousBatchingEngine,
     GenerationEngine,
@@ -5,6 +13,7 @@ from repro.serving.engine import (
     Result,
 )
 from repro.serving.kv_cache import PagedKVCache, PagePool
+from repro.serving.metrics import format_latency, latency_percentiles
 
 __all__ = [
     "ContinuousBatchingEngine",
@@ -13,4 +22,6 @@ __all__ = [
     "PagePool",
     "Request",
     "Result",
+    "format_latency",
+    "latency_percentiles",
 ]

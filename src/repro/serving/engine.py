@@ -11,10 +11,30 @@ sequences of different lengths, new requests are admitted into free slots as
 others finish, and the jitted decode step sees one static shape — continuous
 admission never retriggers compilation. Requests can be admitted straight
 from a ``core.bus`` topic (:meth:`ContinuousBatchingEngine.admit_from_bus`).
+
+Two serving features layer on top of the paged cache:
+
+* **Chunked prefill** (``prefill_chunk=N``, the default): prompts are split
+  into fixed-size chunks and at most ONE chunk runs per engine step,
+  interleaved with the decode step — a long prompt never stalls in-flight
+  decodes for more than one chunk's latency. One jitted chunk function
+  (static chunk shape) covers every prompt length; there is no per-bucket
+  compile. ``prefill_chunk=None`` restores the PR-1 whole-prompt bucketed
+  prefill (and is the automatic path for vlm prompts, whose vision embeds
+  don't chunk).
+* **Prefix sharing** (``prefix_sharing=True``, chunked mode only): prompts
+  are matched against the cache's prefix index at admission; full pages
+  holding an identical prefix are mapped copy-on-write instead of
+  recomputed, and the request skips straight to its first novel chunk.
+
+Per-request latency is recorded on each :class:`Result` — ``ttft`` (enqueue
+to first token) and ``itl`` (successive decode-token gaps) — so callers can
+report p50/p90/p99 without instrumenting the engine.
 """
 
 from __future__ import annotations
 
+import time
 from collections import deque
 from dataclasses import dataclass, field
 
@@ -23,7 +43,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import build_model
-from repro.serving.kv_cache import PagedKVCache, cdiv, write_prefill_pages
+from repro.serving.kv_cache import NULL_PAGE, PagedKVCache, cdiv, write_prefill_pages
 
 
 @dataclass
@@ -32,12 +52,17 @@ class Request:
     prompt: list[int]
     max_new_tokens: int = 16
     temperature: float = 0.0
+    # optional caller-supplied arrival time for TTFT; when None the engine
+    # stamps enqueue time itself (engine-side, the Request is not mutated)
+    arrival_t: float | None = None
 
 
 @dataclass
 class Result:
     uid: str
     tokens: list[int] = field(default_factory=list)
+    ttft: float | None = None      # seconds, enqueue -> first token
+    itl: list[float] = field(default_factory=list)  # inter-token gaps (s)
 
 
 class GenerationEngine:
@@ -108,7 +133,12 @@ class GenerationEngine:
 class _Seq:
     request: Request
     tokens: list[int]
-    order: int = 0  # admission sequence number (preemption picks youngest)
+    order: int = 0      # admission sequence number (preemption picks youngest)
+    phase: str = "decode"   # "prefill" until the whole prompt is cached
+    prefill_pos: int = 0    # prompt positions already resident in pages
+    ttft: float | None = None
+    itl: list[float] = field(default_factory=list)
+    last_t: float = 0.0     # wall time of the previous emitted token
 
 
 def _sample_rows(
@@ -128,12 +158,18 @@ def _sample_rows(
 class ContinuousBatchingEngine:
     """Paged-KV continuous batcher for decoder-only attention families.
 
-    * Prompts are right-padded to a power-of-two bucket for prefill (bounded
-      compile count); padded K/V positions are routed to the null page.
-    * Decode runs one jitted step over ``max_slots`` fixed-width slots; idle
-      slots carry length 0 and their (masked) attention output is discarded.
-    * Sequences finish independently — their pages return to the pool and
-      the slot is refilled from the waiting queue on the next step.
+    * Prompts prefill in fixed-size chunks (one jitted dispatch per chunk,
+      static shape), at most one chunk per step, interleaved with decode —
+      see the module docstring. ``prefill_chunk=None`` restores the PR-1
+      whole-prompt bucketed prefill.
+    * Admission consults the prefix index: requests sharing a cached prefix
+      map those full pages copy-on-write and skip to their first novel chunk.
+    * Decode runs one jitted step over ``max_slots`` fixed-width slots; slots
+      that are idle or still prefilling are masked (null block table, length
+      0) and their attention output is discarded.
+    * Sequences finish independently — their page refcounts drop (pages
+      return to the pool at zero) and the slot is refilled from the waiting
+      queue on the next step.
     """
 
     def __init__(
@@ -147,6 +183,8 @@ class ContinuousBatchingEngine:
         num_pages: int | None = None,
         seed: int = 0,
         attn_impl: str | None = None,
+        prefill_chunk: int | None = 64,
+        prefix_sharing: bool = True,
     ):
         assert not cfg.is_encoder_decoder, "paged engine is decoder-only"
         assert cfg.family in ("dense", "moe", "vlm"), (
@@ -161,6 +199,14 @@ class ContinuousBatchingEngine:
         self.nf = cfg.num_frontend_tokens if cfg.family == "vlm" else 0
         self.max_len = max_len
         self.max_slots = max_slots
+        if prefill_chunk == 0:  # CLI convention: 0 disables chunking
+            prefill_chunk = None
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
+        # vlm prompts carry vision embeds: no token chunking, no prefix trie
+        self._chunked = prefill_chunk is not None and cfg.family in ("dense", "moe")
+        self.prefill_chunk = prefill_chunk
+        self.prefix_sharing = prefix_sharing and self._chunked
         self.cache = PagedKVCache(
             num_layers=cfg.num_layers,
             num_kv_heads=cfg.eff_kv_heads,
@@ -190,13 +236,15 @@ class ContinuousBatchingEngine:
 
         self._decode = jax.jit(decode_and_sample, donate_argnums=(1,))
         self._prefill_fns: dict[int, object] = {}
+        self._chunk_fn = None
         self.waiting: deque[Request] = deque()
         self._slots: dict[int, _Seq] = {}
         self._done: list[Result] = []
         self.rejections: list[tuple[str, str]] = []
-        self.stats = {"decode_steps": 0, "prefills": 0, "tokens": 0,
-                      "rejected": 0, "preemptions": 0}
+        self.stats = {"decode_steps": 0, "prefills": 0, "prefill_chunks": 0,
+                      "tokens": 0, "rejected": 0, "preemptions": 0}
         self._admit_counter = 0
+        self._arrivals: dict[str, float] = {}  # uid -> enqueue time (TTFT)
         # device mirrors of the host tables; rebuilt only when stale
         self._dirty = True
         self._bt_dev = self._lens_dev = self._active_dev = None
@@ -218,6 +266,12 @@ class ContinuousBatchingEngine:
                 f"request {req.uid}: needs {worst} KV pages, pool has "
                 f"{self.cache.num_pages - 1} — it could never be scheduled"
             )
+        # arrival is tracked engine-side (keyed by uid, cleared on finish):
+        # mutating the caller's Request would corrupt TTFT on resubmission
+        self._arrivals.setdefault(
+            req.uid,
+            req.arrival_t if req.arrival_t is not None else time.perf_counter(),
+        )
         self.waiting.append(req)
 
     def admit_from_bus(self, bus, topic: str, group: str, max_msgs: int = 32) -> int:
@@ -255,7 +309,8 @@ class ContinuousBatchingEngine:
         return min(b, max(self.max_len - self.nf, 1))
 
     def _prefill_fn(self, bucket: int):
-        """ONE dispatch per admission: prefill forward + page scatter + first
+        """Legacy whole-prompt path (``prefill_chunk=None`` / vlm): ONE
+        dispatch per admission — prefill forward + page scatter + first
         token sample, jitted per prompt-length bucket."""
         if bucket not in self._prefill_fns:
             s_total = self.nf + bucket
@@ -276,17 +331,103 @@ class ContinuousBatchingEngine:
             self._prefill_fns[bucket] = jax.jit(fn, donate_argnums=(3, 4))
         return self._prefill_fns[bucket]
 
+    def _chunk_prefill_fn(self):
+        """Chunked path: ONE jitted function (static chunk shape) covers
+        every prompt length — chunk forward + page scatter + sample fused.
+        The sampled token is only meaningful on a prompt's final chunk."""
+        if self._chunk_fn is None:
+
+            def fn(params, k_pages, v_pages, tokens, row, start, valid, temp,
+                   tick):
+                pages, logits = self.model.prefill_chunk(
+                    params, {"k": k_pages, "v": v_pages}, row, tokens, start,
+                    valid,
+                )
+                key = jax.random.fold_in(self._base_key, tick)
+                tok = _sample_rows(logits[None], temp[None], key,
+                                   self.cfg.vocab_size)
+                return pages["k"], pages["v"], tok[0]
+
+            self._chunk_fn = jax.jit(fn, donate_argnums=(1, 2))
+        return self._chunk_fn
+
+    def _finish(self, slot: int, seq: _Seq) -> Result:
+        res = Result(seq.request.uid, seq.tokens, ttft=seq.ttft, itl=seq.itl)
+        self.cache.release(slot)
+        self._slots.pop(slot, None)
+        self._arrivals.pop(res.uid, None)
+        self._dirty = True
+        return res
+
+    def _first_token(self, slot: int, seq: _Seq, tok: int) -> None:
+        """Prompt fully cached: record the sampled first token + TTFT."""
+        now = time.perf_counter()
+        seq.tokens.append(tok)
+        seq.phase = "decode"
+        seq.last_t = now
+        arrival = self._arrivals.get(seq.request.uid)
+        if arrival is not None:
+            seq.ttft = now - arrival
+        self.stats["tokens"] += 1
+        self.stats["prefills"] += 1
+        if seq.request.max_new_tokens <= 1:
+            # lands in _done, harvested by THIS step (admit/prefill run
+            # before the harvest) — not delayed to the next one
+            self._done.append(self._finish(slot, seq))
+        self._dirty = True
+
+    def _pending_prefix_gain(self, tokens: list[int]) -> int:
+        """Longest full-page prefix of ``tokens`` that an IN-FLIGHT prefill
+        will publish to the prefix index but has not yet (its chunks haven't
+        reached those pages). Admission waits for such a prefix instead of
+        allocating private pages for content that is about to be shared —
+        without this, a burst of same-prefix requests admitted in one step
+        would get zero sharing."""
+        ps = self.cache.page_size
+        limit = self.cache._prefix_limit(tokens)
+        best = 0
+        for seq in self._slots.values():
+            if seq.phase != "prefill":
+                continue
+            other = seq.request.prompt
+            n = 0
+            for i in range(min(limit, len(other) // ps)):
+                if tokens[i * ps:(i + 1) * ps] != other[i * ps:(i + 1) * ps]:
+                    break
+                n += 1
+            best = max(best, n * ps)
+        return best
+
     def _admit(self) -> int:
         admitted = 0
         while self.waiting:
             req = self.waiting[0]
             plen = len(req.prompt)
             ctx = self.nf + plen
-            if not self.cache.can_admit(ctx):
+            tokens = req.prompt if self.prefix_sharing else None
+            if tokens is not None:
+                matched = self.cache.match_prefix(tokens)[1]
+                if self._pending_prefix_gain(tokens) > matched:
+                    break  # a longer shared prefix lands within a few chunks
+            if not self.cache.can_admit(ctx, tokens):
                 break
             self.waiting.popleft()
-            slot = self.cache.admit(ctx)
+            slot, cached = self.cache.admit(ctx, tokens)
+            self._admit_counter += 1
 
+            if self._chunked:
+                # pages claimed; chunks run one per step via _prefill_step,
+                # starting at the first position not covered by the shared
+                # prefix. The slot stays masked out of decode until then.
+                self._slots[slot] = _Seq(
+                    req, [], order=self._admit_counter, phase="prefill",
+                    prefill_pos=cached,
+                )
+                self._dirty = True
+                admitted += 1
+                continue
+
+            # legacy whole-prompt path (vlm / prefill_chunk=None)
             bucket = self._bucket(plen)
             toks = np.zeros((1, bucket), np.int32)
             toks[0, :plen] = req.prompt
@@ -305,20 +446,47 @@ class ContinuousBatchingEngine:
                 self._ticks,
             )
             self.cache.set_pages(k_pages, v_pages)
-            self.stats["prefills"] += 1
-
-            tok = int(tok)
-            self.stats["tokens"] += 1
-            self._admit_counter += 1
-            seq = _Seq(req, [tok], order=self._admit_counter)
-            if req.max_new_tokens <= 1:
-                self._done.append(Result(req.uid, seq.tokens))
-                self.cache.release(slot)
-            else:
-                self._slots[slot] = seq
-            self._dirty = True
+            seq = _Seq(req, [], order=self._admit_counter)
+            self._slots[slot] = seq
+            self._first_token(slot, seq, int(tok))
             admitted += 1
         return admitted
+
+    def _prefill_step(self) -> bool:
+        """Advance the OLDEST in-flight prefill by one fixed-size chunk.
+
+        At most one chunk runs per engine step, so concurrent decodes stall
+        for one chunk's latency at worst. Pages covered by the dispatched
+        chunk are published to the prefix index afterwards — dispatch order
+        is execution order, so a later admission can share them safely.
+        """
+        cands = [(q.order, s) for s, q in self._slots.items()
+                 if q.phase == "prefill"]
+        if not cands:
+            return False
+        _, slot = min(cands)
+        seq = self._slots[slot]
+        prompt = seq.request.prompt
+        start = seq.prefill_pos
+        c = self.prefill_chunk
+        valid = min(c, len(prompt) - start)
+        toks = np.zeros((c,), np.int32)
+        toks[:valid] = prompt[start:start + valid]
+        self._ticks += 1
+        k_pages, v_pages, tok = self._chunk_prefill_fn()(
+            self.params, self.cache.k_pages, self.cache.v_pages,
+            jnp.asarray(toks), self.cache.device_row(slot),
+            jnp.asarray(start, jnp.int32), jnp.asarray(valid, jnp.int32),
+            jnp.asarray(seq.request.temperature, jnp.float32), self._ticks,
+        )
+        self.cache.set_pages(k_pages, v_pages)
+        seq.prefill_pos = start + valid
+        self.stats["prefill_chunks"] += 1
+        if self.prefix_sharing:
+            self.cache.register_prefix(slot, prompt, seq.prefill_pos)
+        if seq.prefill_pos == len(prompt):
+            self._first_token(slot, seq, int(tok))
+        return True
 
     def _preempt(self, slot: int) -> None:
         """Evict a sequence and requeue its request (regenerated from
@@ -330,11 +498,17 @@ class ContinuousBatchingEngine:
         self._dirty = True
 
     def _ensure_capacity(self) -> None:
-        """Give every in-flight slot a page for its next position, preempting
-        the youngest sequences if the pool runs dry. A lone sequence can
-        always grow (enqueue rejects requests that exceed the whole pool),
-        so this terminates with at least one slot making progress."""
-        for slot in sorted(self._slots, key=lambda s: self._slots[s].order):
+        """Give every DECODING slot a writable page for its next position —
+        growing at page boundaries, copying a shared (refcount > 1) page
+        anywhere else — preempting the youngest sequences if the pool runs
+        dry. A lone sequence can always grow (enqueue rejects requests that
+        exceed the whole pool), so this terminates with at least one slot
+        making progress."""
+        order = sorted(
+            (s for s, q in self._slots.items() if q.phase == "decode"),
+            key=lambda s: self._slots[s].order,
+        )
+        for slot in order:
             while slot in self._slots:
                 try:
                     if self.cache.ensure_append_capacity(slot):
@@ -352,23 +526,48 @@ class ContinuousBatchingEngine:
         return not (self.waiting or self._slots or self._done)
 
     def step(self) -> list[Result]:
-        """Admit, run one decode step over all in-flight slots, evict
-        finished sequences. Returns the requests that completed."""
+        """Admit, run (at most) one prefill chunk, run one decode step over
+        all decoding slots, evict finished sequences. Returns the requests
+        that completed."""
         self._admit()
+        ran = self._prefill_step()
+        # the one-chunk-per-step cap exists to bound decode stalls; with no
+        # decode in flight there is nothing to stall, so drain chunks
+        # back-to-back until a sequence becomes decodable (cold start,
+        # post-burst refill)
+        while ran and not any(
+            q.phase == "decode" for q in self._slots.values()
+        ):
+            self._admit()
+            ran = self._prefill_step()
         finished, self._done = self._done, []
-        if not self._slots:
+        if not any(q.phase == "decode" for q in self._slots.values()):
             return finished
 
         self._ensure_capacity()
+        if not any(q.phase == "decode" for q in self._slots.values()):
+            return finished  # preemption can empty the decode set
         if self._dirty:  # admission/eviction/page-growth: refresh mirrors
             tokens = np.zeros((self.max_slots, 1), np.int32)
             temps = np.zeros((self.max_slots,), np.float32)
             active = np.zeros((self.max_slots,), np.int32)
+            # fresh host copies: slots still prefilling are masked to the
+            # null page / length 0 so the decode write lands in the sink
+            # and their (discarded) attention output reads nothing
+            bt = self.cache.block_tables.copy()
+            lens = self.cache.lengths.copy()
+            live = np.zeros((self.max_slots,), bool)
             for slot, seq in self._slots.items():
+                if seq.phase != "decode":
+                    continue
+                live[slot] = True
                 tokens[slot, 0] = seq.tokens[-1]
                 temps[slot] = seq.request.temperature
                 active[slot] = 1
-            self._bt_dev, self._lens_dev = self.cache.device_tables()
+            bt[~live] = NULL_PAGE
+            lens[~live] = 0
+            self._bt_dev = jnp.asarray(bt)
+            self._lens_dev = jnp.asarray(lens)
             self._active_dev = jnp.asarray(active)
             self._toks_dev = jnp.asarray(tokens)
             self._temps_dev = jnp.asarray(temps)
@@ -382,16 +581,18 @@ class ContinuousBatchingEngine:
         self.cache.set_pages(pages["k"], pages["v"])
         self.stats["decode_steps"] += 1
         toks = np.asarray(self._toks_dev)[:, 0]
+        now = time.perf_counter()
         for slot in list(self._slots):
             seq = self._slots[slot]
+            if seq.phase != "decode":
+                continue
             self.cache.append(slot)
             seq.tokens.append(int(toks[slot]))
+            seq.itl.append(now - seq.last_t)
+            seq.last_t = now
             self.stats["tokens"] += 1
             if len(seq.tokens) >= seq.request.max_new_tokens:
-                finished.append(Result(seq.request.uid, seq.tokens))
-                self.cache.release(slot)
-                del self._slots[slot]
-                self._dirty = True
+                finished.append(self._finish(slot, seq))
         return finished
 
     def generate(self, requests: list[Request]) -> list[Result]:

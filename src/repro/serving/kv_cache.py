@@ -1,18 +1,47 @@
-"""Block-table KV cache: fixed-size pages allocated from a shared pool.
+"""Block-table KV cache: refcounted pages with prefix sharing + copy-on-write.
 
 The device side is two arrays per model — ``k_pages``/``v_pages`` of shape
 (L, P, page_size, KVH, Dh) — plus per-step int32 inputs (block tables and
 lengths), so the jitted decode step sees ONE static shape no matter how many
-sequences are in flight or how long each one is. The host side is a free-list
-allocator (:class:`PagePool`) and per-slot bookkeeping (:class:`PagedKVCache`)
-that hands the engine ready-to-transfer block tables.
+sequences are in flight or how long each one is. The host side is a
+refcounted free-list allocator (:class:`PagePool`) and per-slot bookkeeping
+(:class:`PagedKVCache`) that hands the engine ready-to-transfer block tables.
 
 Page 0 is reserved as the **null page**: unused block-table entries and idle
 decode slots point at it, so the kernel's gathers never go out of bounds and
 idle-slot writes land in a sink nobody reads (reads are masked by length).
+
+Sharing model (this PR):
+
+* Every page carries a **refcount**. A page is physically freed (returned to
+  the free list) only when its refcount reaches zero, so two sequences can
+  map the same physical page and release independently.
+* A **prefix index** maps the token content of a chain of full pages to the
+  physical page holding its K/V. Keys are hash-chained — (parent physical
+  page, this page's token chunk), root = the null page — so lookup and
+  registration are O(1) per page, and a page is only reused when the
+  ENTIRE prefix matches (the parent id names the whole chain), not just
+  that page's tokens.
+  :meth:`PagedKVCache.admit` consults it to map shared full pages read-only;
+  matches are capped below the prompt's last token (the engine always needs
+  at least one position's logits, and recomputing it must never write into
+  a shared page).
+* **Copy-on-write**: :meth:`ensure_append_capacity` copies a page (device
+  page-granular copy, donated buffers so XLA updates in place) before a
+  sequence writes into a page whose refcount is > 1. With admission-time
+  sharing restricted to full pages this only triggers after :meth:`fork`,
+  which maps *all* of a sequence's pages — including the partial tail —
+  into a second slot.
+
+Pages are registered into the prefix index by the engine *after* the prefill
+chunk that fills them has been dispatched (dispatch order = execution order
+on one device stream), so a concurrent admission can never read a shared
+page before its contents exist.
 """
 
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -26,20 +55,25 @@ def cdiv(a: int, b: int) -> int:
 
 
 class PagePool:
-    """LIFO free-list allocator over physical page ids [1, num_pages)."""
+    """Refcounted LIFO free-list allocator over physical page ids [1, num_pages).
+
+    ``alloc`` hands out pages with refcount 1; ``incref`` adds a sharer;
+    ``decref`` returns the page to the free list when the count hits zero.
+    """
 
     def __init__(self, num_pages: int):
         assert num_pages >= 2, "need at least the null page + one real page"
         self.num_pages = num_pages
         # LIFO so recently-freed (cache-warm) pages are reused first
         self._free = list(range(num_pages - 1, 0, -1))
+        self.refcounts = np.zeros((num_pages,), np.int32)
 
     @property
     def available(self) -> int:
         return len(self._free)
 
     def alloc(self, n: int = 1) -> list[int]:
-        """Pop n pages; raises RuntimeError when the pool is exhausted."""
+        """Pop n pages (each refcount 1); RuntimeError when exhausted."""
         assert n > 0, n  # n=0 would slice the whole free list without popping
         if n > len(self._free):
             raise RuntimeError(
@@ -47,20 +81,46 @@ class PagePool:
             )
         taken = self._free[-n:][::-1]
         del self._free[len(self._free) - n:]
+        for p in taken:
+            self.refcounts[p] = 1
         return taken
+
+    def incref(self, page: int) -> None:
+        assert page != NULL_PAGE and self.refcounts[page] > 0, page
+        self.refcounts[page] += 1
+
+    def decref(self, page: int) -> bool:
+        """Drop one reference; returns True when the page was freed."""
+        assert page != NULL_PAGE, "cannot free the null page"
+        assert self.refcounts[page] > 0, f"decref of free page {page}"
+        self.refcounts[page] -= 1
+        if self.refcounts[page] == 0:
+            self._free.append(page)
+            return True
+        return False
 
     def free(self, pages: list[int]) -> None:
         for p in pages:
-            assert p != NULL_PAGE, "cannot free the null page"
-            self._free.append(p)
+            self.decref(p)
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _copy_page(k_pages, v_pages, src, dst):
+    """Copy one physical page (all layers) src -> dst, in place (donated)."""
+    ks = jax.lax.dynamic_slice_in_dim(k_pages, src, 1, axis=1)
+    vs = jax.lax.dynamic_slice_in_dim(v_pages, src, 1, axis=1)
+    k_pages = jax.lax.dynamic_update_slice_in_dim(k_pages, ks, dst, axis=1)
+    v_pages = jax.lax.dynamic_update_slice_in_dim(v_pages, vs, dst, axis=1)
+    return k_pages, v_pages
 
 
 class PagedKVCache:
     """Device page pool + host block tables for up to ``max_slots`` sequences.
 
     The engine owns the jitted functions; this class owns allocation state
-    and the current device arrays (which the engine swaps after each donated
-    decode/prefill-write call via :meth:`set_pages`).
+    (slots, refcounts, the prefix index) and the current device arrays
+    (which the engine swaps after each donated decode/prefill-write call via
+    :meth:`set_pages`).
     """
 
     def __init__(
@@ -92,6 +152,72 @@ class PagedKVCache:
         self.lengths = np.zeros((max_slots,), np.int32)
         self._slot_pages: list[list[int]] = [[] for _ in range(max_slots)]
         self._free_slots = list(range(max_slots - 1, -1, -1))
+        # prefix index: (parent physical page, token chunk) -> physical page
+        self._prefix_index: dict[tuple, int] = {}
+        self._page_key: dict[int, tuple] = {}  # reverse map for dereg on free
+        self.stats = {"prefix_hits": 0, "prefix_tokens_reused": 0,
+                      "cow_copies": 0}
+
+    # ------------------------------------------------------------------
+    # prefix index
+    # ------------------------------------------------------------------
+    def _prefix_limit(self, tokens) -> int:
+        """Number of full pages eligible for sharing: capped strictly below
+        the last token, so recomputing the sampling position never writes
+        into a shared page (see module docstring)."""
+        return max(0, (len(tokens) - 1) // self.page_size)
+
+    def match_prefix(self, tokens) -> tuple[list[int], int]:
+        """Longest chain of registered full pages matching ``tokens``.
+
+        Keys are hash-chained, (parent physical page, this page's token
+        chunk) — O(1) per level instead of rehashing the whole prefix —
+        with NULL_PAGE as the chain root. A parent page id uniquely names
+        its prefix because every sharer of a child page also holds the
+        parent (prefix structure), so a parent entry can never be freed
+        (and its id recycled) while a child entry survives.
+
+        Returns (pages, matched_token_count). Read-only: the caller
+        (:meth:`admit`) takes the references.
+        """
+        ps = self.page_size
+        pages: list[int] = []
+        parent = NULL_PAGE
+        for i in range(self._prefix_limit(tokens)):
+            page = self._prefix_index.get(
+                (parent, tuple(tokens[i * ps:(i + 1) * ps]))
+            )
+            if page is None:
+                break
+            pages.append(page)
+            parent = page
+        return pages, len(pages) * ps
+
+    def register_prefix(self, slot: int, tokens, upto: int) -> None:
+        """Publish ``slot``'s full pages covering ``tokens[:upto]`` into the
+        prefix index. MUST only be called once the K/V for those positions
+        has been dispatched (the index hands these pages to other slots).
+
+        Keys chain through THIS slot's own pages (not a previously
+        registered twin): the slot provably keeps its own parent alive, so
+        child entries never dangle behind a freed/recycled parent id. If a
+        twin chain registered first (concurrent identical prefills), ours
+        becomes an unreachable side chain — a missed match, never a wrong
+        one — and admission deferral makes that window rare."""
+        ps = self.page_size
+        parent = NULL_PAGE
+        for i in range(min(upto, len(tokens)) // ps):
+            key = (parent, tuple(tokens[i * ps:(i + 1) * ps]))
+            page = self._slot_pages[slot][i]
+            if key not in self._prefix_index:
+                self._prefix_index[key] = page
+                self._page_key[page] = key
+            parent = page
+
+    def _deregister(self, page: int) -> None:
+        key = self._page_key.pop(page, None)
+        if key is not None:
+            del self._prefix_index[key]
 
     # ------------------------------------------------------------------
     # slots
@@ -100,35 +226,84 @@ class PagedKVCache:
     def free_slot_count(self) -> int:
         return len(self._free_slots)
 
-    def can_admit(self, context_len: int) -> bool:
-        return (
-            bool(self._free_slots)
-            and self.pool.available >= cdiv(max(context_len, 1), self.page_size)
-        )
+    def can_admit(self, context_len: int, tokens=None) -> bool:
+        need = cdiv(max(context_len, 1), self.page_size)
+        if tokens is not None:
+            need -= len(self.match_prefix(tokens)[0])
+        return bool(self._free_slots) and self.pool.available >= need
 
-    def admit(self, context_len: int) -> int:
-        """Claim a slot and pages for an initial context of ``context_len``."""
+    def admit(self, context_len: int, tokens=None) -> tuple[int, int]:
+        """Claim a slot and pages for an initial context of ``context_len``.
+
+        When ``tokens`` (the prompt) is given, full pages already holding a
+        matching prefix are mapped read-only (refcount bumped) instead of
+        allocated. Returns (slot, cached_len) — the caller only needs to
+        prefill positions >= cached_len.
+        """
         assert context_len <= self.max_pages_per_seq * self.page_size, (
             context_len, self.max_pages_per_seq * self.page_size)
+        shared: list[int] = []
+        cached = 0
+        if tokens is not None:
+            shared, cached = self.match_prefix(tokens)
         slot = self._free_slots.pop()
-        pages = self.pool.alloc(cdiv(max(context_len, 1), self.page_size))
+        for p in shared:
+            self.pool.incref(p)
+        fresh = cdiv(max(context_len, 1), self.page_size) - len(shared)
+        try:
+            pages = shared + (self.pool.alloc(fresh) if fresh > 0 else [])
+        except RuntimeError:
+            for p in shared:
+                self.pool.decref(p)
+            self._free_slots.append(slot)
+            raise
+        if shared:
+            self.stats["prefix_hits"] += 1
+            self.stats["prefix_tokens_reused"] += cached
         self._slot_pages[slot] = pages
         self.block_tables[slot] = NULL_PAGE
         self.block_tables[slot, : len(pages)] = pages
         self.lengths[slot] = context_len
+        return slot, cached
+
+    def fork(self, src_slot: int) -> int:
+        """Map every page of ``src_slot`` (including the partial tail) into a
+        fresh slot, copy-on-write. The clone starts at the same length; the
+        first append into a still-shared page triggers exactly one copy."""
+        assert self._slot_pages[src_slot], f"slot {src_slot} is empty"
+        slot = self._free_slots.pop()
+        pages = list(self._slot_pages[src_slot])
+        for p in pages:
+            self.pool.incref(p)
+        self._slot_pages[slot] = pages
+        self.block_tables[slot] = self.block_tables[src_slot]
+        self.lengths[slot] = self.lengths[src_slot]
         return slot
 
     def ensure_append_capacity(self, slot: int) -> bool:
-        """Make sure position ``lengths[slot]`` has a page before a decode
-        step writes there (on-demand growth at page boundaries). Returns
-        True when a page was allocated (the block table changed); raises
-        RuntimeError when the pool is exhausted (callers may preempt)."""
+        """Make sure position ``lengths[slot]`` is writable before a decode
+        step lands there: allocates a page at page boundaries (on-demand
+        growth) and copy-on-writes a shared page anywhere else. Returns True
+        when the block table changed; raises RuntimeError when the pool is
+        exhausted (callers may preempt)."""
         need = int(self.lengths[slot]) // self.page_size
         pages = self._slot_pages[slot]
         if need == len(pages):
             (new,) = self.pool.alloc(1)
             pages.append(new)
             self.block_tables[slot, need] = new
+            return True
+        old = pages[need]
+        if self.pool.refcounts[old] > 1:  # shared: copy before the write
+            (new,) = self.pool.alloc(1)
+            self.k_pages, self.v_pages = _copy_page(
+                self.k_pages, self.v_pages,
+                jnp.asarray(old, jnp.int32), jnp.asarray(new, jnp.int32),
+            )
+            self.pool.decref(old)  # shared, so never frees here
+            pages[need] = new
+            self.block_tables[slot, need] = new
+            self.stats["cow_copies"] += 1
             return True
         return False
 
@@ -137,7 +312,9 @@ class PagedKVCache:
         self.lengths[slot] += 1
 
     def release(self, slot: int) -> None:
-        self.pool.free(self._slot_pages[slot])
+        for p in self._slot_pages[slot]:
+            if self.pool.decref(p):
+                self._deregister(p)
         self._slot_pages[slot] = []
         self.block_tables[slot] = NULL_PAGE
         self.lengths[slot] = 0

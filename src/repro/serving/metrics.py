@@ -1,0 +1,37 @@
+"""Latency summaries over engine Results (single source for the
+percentile/format logic used by ``launch/serve.py`` and ``benchmarks/run.py``).
+
+``ttft``/``itl`` are recorded per-request by ``ContinuousBatchingEngine``
+(see ``engine.Result``); lockstep Results carry neither and are skipped.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def latency_percentiles(results) -> dict | None:
+    """p50/p90/p99 TTFT and inter-token latency (ms) + max ITL (the decode
+    stall bound). Returns None when no result carries latency data."""
+    ttfts = [r.ttft for r in results if getattr(r, "ttft", None) is not None]
+    itls = [g for r in results for g in getattr(r, "itl", [])]
+    if not ttfts or not itls:
+        return None
+    pt = np.percentile(ttfts, [50, 90, 99]) * 1e3
+    pi = np.percentile(itls, [50, 90, 99]) * 1e3
+    return {
+        "ttft_ms": tuple(float(x) for x in pt),
+        "itl_ms": tuple(float(x) for x in pi),
+        "itl_ms_max": float(max(itls) * 1e3),
+    }
+
+
+def format_latency(results) -> str:
+    """Compact ``k=p50/p90/p99``-style summary for bench rows and logs."""
+    p = latency_percentiles(results)
+    if p is None:
+        return "no_latency_data"
+    t, i = p["ttft_ms"], p["itl_ms"]
+    return (f"ttft_ms_p50={t[0]:.1f}/p90={t[1]:.1f}/p99={t[2]:.1f};"
+            f"itl_ms_p50={i[0]:.1f}/p90={i[1]:.1f}/p99={i[2]:.1f};"
+            f"itl_ms_max={p['itl_ms_max']:.1f}")

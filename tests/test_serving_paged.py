@@ -50,7 +50,8 @@ def test_paged_cache_block_table_bookkeeping():
         num_layers=1, num_kv_heads=1, head_dim=4, dtype=jnp.float32,
         max_slots=2, max_context=32, page_size=8,
     )
-    slot = cache.admit(context_len=10)  # needs 2 pages
+    slot, cached = cache.admit(context_len=10)  # needs 2 pages
+    assert cached == 0  # no prompt tokens given -> nothing shared
     pages = cache._slot_pages[slot]
     assert len(pages) == 2
     assert list(cache.block_tables[slot, :2]) == pages
@@ -162,7 +163,7 @@ def test_prefill_pages_match_dense_cache(smollm):
         head_dim=cfg.head_dim, dtype=jnp.dtype(cfg.dtype),
         max_slots=2, max_context=32, page_size=4,
     )
-    slot = paged.admit(context_len=plen)
+    slot, _ = paged.admit(context_len=plen)
     k_pages, v_pages = write_prefill_pages(
         paged.k_pages, paged.v_pages, cache["k"][:, 0], cache["v"][:, 0],
         paged.device_row(slot), jnp.asarray(plen, jnp.int32),
@@ -200,7 +201,7 @@ def test_decode_step_paged_matches_dense(smollm):
         head_dim=cfg.head_dim, dtype=jnp.dtype(cfg.dtype),
         max_slots=3, max_context=max_len, page_size=4,
     )
-    slot = paged.admit(context_len=plen)
+    slot, _ = paged.admit(context_len=plen)
     pcache, plogits = jax.jit(
         lambda p, b, i: model.prefill(p, b, plen, logits_index=i)
     )(params, batch, jnp.asarray(plen - 1, jnp.int32))
@@ -295,7 +296,8 @@ def test_engine_preempts_under_pool_pressure(smollm):
     cfg, model, params = smollm
     eng = ContinuousBatchingEngine(cfg, params, max_len=40, max_slots=2,
                                    page_size=8, num_pages=6)
-    reqs = [Request(f"p{i}", list(range(1, 15)), max_new_tokens=10)
+    # distinct prompts: prefix sharing must not relieve the pool pressure
+    reqs = [Request(f"p{i}", [100 + i] + list(range(2, 15)), max_new_tokens=10)
             for i in range(3)]
     out = eng.generate(reqs)
     assert eng.stats["preemptions"] > 0
@@ -339,6 +341,224 @@ def test_bus_poison_message_is_rejected_and_committed(smollm, tmp_path):
     while not eng.idle:
         served.extend(eng.step())
     assert [r.uid for r in served] == ["good"]
+
+
+# ---------------------------------------------------------------------------
+# prefix sharing / copy-on-write
+# ---------------------------------------------------------------------------
+
+
+def _small_cache(**kw):
+    args = dict(num_layers=1, num_kv_heads=1, head_dim=4, dtype=jnp.float32,
+                max_slots=3, max_context=32, page_size=8)
+    args.update(kw)
+    return PagedKVCache(**args)
+
+
+def test_match_prefix_capped_below_last_token():
+    """A prompt equal to its cached prefix must still recompute >= 1 token
+    (the engine needs its logits), so matching stops strictly before the
+    last token even on a page boundary."""
+    cache = _small_cache()
+    toks = list(range(100, 116))  # exactly 2 full pages
+    slot, cached = cache.admit(len(toks), toks)
+    assert cached == 0
+    cache.register_prefix(slot, toks, len(toks))
+    # identical prompt: only page 0 is eligible (page 1 holds the last token)
+    _, cached2 = cache.match_prefix(toks)
+    assert cached2 == 8
+    # a longer prompt extending the prefix can use both full pages
+    _, cached3 = cache.match_prefix(toks + [1, 2, 3])
+    assert cached3 == 16
+
+
+def test_shared_prefix_pages_not_double_freed():
+    """Two slots sharing prefix pages release independently; the shared
+    page survives the first release and every refcount returns to zero."""
+    cache = _small_cache()
+    toks = list(range(1, 21))  # 20 tokens: 2 full pages + 1 partial
+    a, cached_a = cache.admit(len(toks), toks)
+    assert cached_a == 0 and len(cache._slot_pages[a]) == 3
+    cache.register_prefix(a, toks, len(toks))
+
+    b, cached_b = cache.admit(len(toks), toks)
+    assert cached_b == 16  # both full pages shared
+    shared = cache._slot_pages[b][:2]
+    assert shared == cache._slot_pages[a][:2]
+    assert all(cache.pool.refcounts[p] == 2 for p in shared)
+
+    avail = cache.pool.available
+    cache.release(a)
+    # a's private tail page freed; the two shared pages survive for b
+    assert cache.pool.available == avail + 1
+    assert all(cache.pool.refcounts[p] == 1 for p in shared)
+    # b can still resolve its prefix through the index
+    assert cache.match_prefix(toks + [99])[1] == 16
+    cache.release(b)
+    assert cache.pool.available == cache.num_pages - 1
+    assert (cache.pool.refcounts[1:] == 0).all()
+    assert not cache._prefix_index  # freed pages leave the index
+
+
+def test_fork_cow_copies_exactly_one_page():
+    """A write after fork copies exactly the written page; the other pages
+    stay shared and the source slot's data is untouched."""
+    cache = _small_cache()
+    toks = list(range(1, 13))  # 12 tokens: 1 full page + 1 partial
+    a, _ = cache.admit(len(toks), toks)
+    # fill the pool pages with recognizable data
+    k = cache.k_pages
+    for i, p in enumerate(cache._slot_pages[a]):
+        k = k.at[:, p].set(float(i + 1))
+    cache.set_pages(k, cache.v_pages)
+
+    b = cache.fork(a)
+    assert cache._slot_pages[b] == cache._slot_pages[a]
+    assert int(cache.lengths[b]) == 12
+    assert all(cache.pool.refcounts[p] == 2 for p in cache._slot_pages[a])
+
+    avail = cache.pool.available
+    changed = cache.ensure_append_capacity(b)  # next write: pos 12, page 1
+    assert changed and cache.stats["cow_copies"] == 1
+    assert cache.pool.available == avail - 1  # exactly one page allocated
+    pa, pb = cache._slot_pages[a], cache._slot_pages[b]
+    assert pb[0] == pa[0] and pb[1] != pa[1]  # full page shared, tail copied
+    assert cache.pool.refcounts[pa[0]] == 2
+    assert cache.pool.refcounts[pa[1]] == 1 and cache.pool.refcounts[pb[1]] == 1
+    # the copy carried the tail page's contents
+    np.testing.assert_array_equal(
+        np.asarray(cache.k_pages[:, pb[1]]), np.asarray(cache.k_pages[:, pa[1]])
+    )
+    # a's next append sees refcount 1 everywhere: no second copy
+    assert not cache.ensure_append_capacity(a)
+    assert cache.stats["cow_copies"] == 1
+
+    cache.release(a)
+    cache.release(b)
+    assert cache.pool.available == cache.num_pages - 1
+    assert (cache.pool.refcounts[1:] == 0).all()
+
+
+def test_prefill_chunk_matches_whole_prefill(smollm):
+    """Chunked prefill (2 chunks) reproduces the whole-prompt prefill's
+    KV pages and final-position logits."""
+    cfg, model, params = smollm
+    plen, chunk = 11, 8
+    prompt = np.arange(1, plen + 1, dtype=np.int32)
+    batch = {"tokens": jnp.asarray(prompt[None])}
+    dcache, dlogits = jax.jit(
+        lambda p, b, i: model.prefill(p, b, plen, logits_index=i)
+    )(params, batch, jnp.asarray(plen - 1, jnp.int32))
+
+    paged = PagedKVCache(
+        num_layers=cfg.num_layers, num_kv_heads=cfg.eff_kv_heads,
+        head_dim=cfg.head_dim, dtype=jnp.dtype(cfg.dtype),
+        max_slots=2, max_context=32, page_size=4,
+    )
+    slot, _ = paged.admit(context_len=plen)
+    row = paged.device_row(slot)
+    pages = {"k": paged.k_pages, "v": paged.v_pages}
+    logits = None
+    for start in range(0, plen, chunk):
+        valid = min(chunk, plen - start)
+        toks = np.zeros((chunk,), np.int32)
+        toks[:valid] = prompt[start:start + valid]
+        pages, logits = model.prefill_chunk(
+            params, pages, row, jnp.asarray(toks),
+            jnp.asarray(start, jnp.int32), jnp.asarray(valid, jnp.int32),
+        )
+    paged.set_pages(pages["k"], pages["v"])
+    got_k, got_v = paged.gather_dense(slot)
+    np.testing.assert_allclose(
+        got_k, np.asarray(dcache["k"][:, 0, :plen]), atol=1e-5, rtol=1e-5
+    )
+    np.testing.assert_allclose(
+        got_v, np.asarray(dcache["v"][:, 0, :plen]), atol=1e-5, rtol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(logits), np.asarray(dlogits[0]), atol=1e-4, rtol=1e-4
+    )
+
+
+def test_engine_chunked_long_prompt_matches_lockstep(smollm):
+    """A multi-chunk prompt through the chunked engine stays exact."""
+    cfg, model, params = smollm
+    rng = np.random.default_rng(5)
+    reqs = [
+        Request("long", list(rng.integers(1, cfg.vocab_size, 50)), 8),
+        Request("short", list(rng.integers(1, cfg.vocab_size, 5)), 8),
+    ]
+    eng = ContinuousBatchingEngine(cfg, params, max_len=64, max_slots=2,
+                                   page_size=8, prefill_chunk=16)
+    out = eng.generate(reqs)
+    assert eng.stats["prefill_chunks"] >= 4  # 50-token prompt = 4 chunks
+    base = GenerationEngine(cfg, params, max_len=64)
+    for r, o in zip(reqs, out):
+        exact = base.generate([Request(r.uid, r.prompt, r.max_new_tokens)])[0]
+        assert o.tokens == exact.tokens, r.uid
+    assert eng.cache.pool.available == eng.cache.num_pages - 1
+
+
+def test_engine_prefix_sharing_reuses_pages_and_stays_exact(smollm):
+    """Identical prompts in flight share prefix pages (trie hits recorded)
+    and greedy outputs match the no-sharing engine."""
+    cfg, model, params = smollm
+    rng = np.random.default_rng(9)
+    prefix = list(rng.integers(1, cfg.vocab_size, 24))
+    reqs = [Request(f"s{i}", prefix + [10 + i], max_new_tokens=6)
+            for i in range(4)]
+    shared = ContinuousBatchingEngine(cfg, params, max_len=64, max_slots=4,
+                                      page_size=8, prefill_chunk=16)
+    out_shared = shared.generate(reqs)
+    assert shared.cache.stats["prefix_hits"] >= 1
+    assert shared.cache.stats["prefix_tokens_reused"] >= 16
+
+    plain = ContinuousBatchingEngine(cfg, params, max_len=64, max_slots=4,
+                                     page_size=8, prefill_chunk=16,
+                                     prefix_sharing=False)
+    out_plain = plain.generate(
+        [Request(r.uid, r.prompt, r.max_new_tokens) for r in reqs]
+    )
+    assert plain.cache.stats["prefix_hits"] == 0
+    for a, b in zip(out_shared, out_plain):
+        assert a.tokens == b.tokens, a.uid
+    assert shared.cache.pool.available == shared.cache.num_pages - 1
+    assert (shared.cache.pool.refcounts[1:] == 0).all()
+
+
+def test_chunked_prefill_interleaves_with_decode(smollm):
+    """While a long prompt prefills chunk-by-chunk, an in-flight decode
+    keeps emitting: it must finish BEFORE the long prompt's first token."""
+    cfg, model, params = smollm
+    eng = ContinuousBatchingEngine(cfg, params, max_len=128, max_slots=2,
+                                   page_size=8, prefill_chunk=8)
+    eng.enqueue(Request("short", [1, 2, 3], max_new_tokens=6))
+    eng.step()  # short: single-chunk prefill + first token
+    long_prompt = list(range(1, 81))  # 10 chunks of 8
+    eng.enqueue(Request("long", long_prompt, max_new_tokens=2))
+    finished = []
+    order = []
+    while not eng.idle:
+        for res in eng.step():
+            finished.append(res)
+            order.append(res.uid)
+    assert order == ["short", "long"]
+    by_uid = {r.uid: r for r in finished}
+    assert len(by_uid["short"].tokens) == 6
+    assert len(by_uid["long"].tokens) == 2
+    # decode steps ran while the long prompt was still chunking
+    assert eng.stats["prefill_chunks"] >= 10
+    assert eng.stats["decode_steps"] >= 5
+
+
+def test_engine_records_latency_metrics(smollm):
+    cfg, model, params = smollm
+    eng = ContinuousBatchingEngine(cfg, params, max_len=64, max_slots=2,
+                                   page_size=8)
+    (res,) = eng.generate([Request("t", [1, 2, 3, 4], max_new_tokens=5)])
+    assert res.ttft is not None and res.ttft > 0
+    assert len(res.itl) == 4  # gaps between the 5 emitted tokens
+    assert all(g > 0 for g in res.itl)
 
 
 def test_engine_admits_from_bus(smollm, tmp_path):

@@ -16,7 +16,9 @@ CFG = dataclasses.replace(
     reduced(ARCHS["smollm-360m"]), num_layers=2, d_model=128, num_heads=4,
     num_kv_heads=2, head_dim=32, d_ff=256,
 )
-OPT = AdamWConfig(lr=3e-3, warmup_steps=5, decay_steps=5000,
+# lr 6e-3: at 3e-3 this 2-layer toy model's 150-step loss drop sat right at
+# the 0.5 threshold and flaked with backend/version float drift
+OPT = AdamWConfig(lr=6e-3, warmup_steps=5, decay_steps=5000,
                   weight_decay=0.0, moment_dtype="float32")
 
 

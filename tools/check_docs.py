@@ -1,0 +1,61 @@
+"""Docs snippet checker: every ```python fence in README.md and docs/*.md
+must at least compile, and its import statements must resolve.
+
+Full execution is out of scope (snippets may train models or spin up
+workers); compiling catches syntax rot and running just the imports
+catches renamed/moved modules — the most common way docs go stale.
+
+Run: PYTHONPATH=src python tools/check_docs.py
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+
+
+def snippets(path: Path):
+    for i, block in enumerate(FENCE.findall(path.read_text())):
+        yield f"{path.relative_to(ROOT)}[{i}]", block
+
+
+def check(name: str, code: str) -> list[str]:
+    errors = []
+    try:
+        tree = ast.parse(code)
+    except SyntaxError as e:
+        return [f"{name}: syntax error: {e}"]
+    imports = [
+        n for n in tree.body if isinstance(n, (ast.Import, ast.ImportFrom))
+    ]
+    for node in imports:
+        src = ast.unparse(node)
+        try:
+            exec(compile(ast.Module([node], []), name, "exec"), {})
+        except Exception as e:  # noqa: BLE001 - report every failure kind
+            errors.append(f"{name}: `{src}` failed: {type(e).__name__}: {e}")
+    return errors
+
+
+def main() -> int:
+    files = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+    errors, checked = [], 0
+    for f in files:
+        if not f.exists():
+            continue
+        for name, code in snippets(f):
+            checked += 1
+            errors.extend(check(name, code))
+    for e in errors:
+        print(f"FAIL {e}")
+    print(f"check_docs: {checked} snippet(s), {len(errors)} error(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
