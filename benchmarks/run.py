@@ -160,10 +160,21 @@ def _latency_summary(results) -> str:
 
 def _fresh(reqs):
     """Fresh Request copies so repeated runs stay fully independent."""
-    from repro.serving.engine import Request
+    from repro.serving import Request
 
     return [Request(r.uid, list(r.prompt), r.max_new_tokens, r.temperature)
             for r in reqs]
+
+
+def _drain(engine, reqs):
+    """Drive one trace through the raw protocol (submit + step): the bench
+    deliberately measures the loop production callers run, NOT the
+    deprecated ``engine.generate`` wrapper — if the wrapper and the
+    protocol ever diverge in cost, this catches it."""
+    handles = [engine.submit(r) for r in reqs]
+    while not engine.idle:
+        engine.step()
+    return [h.result() for h in handles]
 
 
 def bench_serving(quick: bool):
@@ -180,8 +191,7 @@ def bench_serving(quick: bool):
 
     from repro.configs import ARCHS, reduced
     from repro.models import build_model
-    from repro.serving import ContinuousBatchingEngine, GenerationEngine
-    from repro.serving.engine import Request
+    from repro.serving import ContinuousBatchingEngine, GenerationEngine, Request
 
     cfg = reduced(ARCHS["smollm-360m"])
     model = build_model(cfg)
@@ -201,30 +211,27 @@ def bench_serving(quick: bool):
     max_len = 128 + 64
 
     slots = 8
-    lockstep = GenerationEngine(cfg, params, max_len=max_len)
+    # every engine is driven through the SAME protocol loop (_drain); the
+    # lockstep engine chunks the trace into max_batch micro-batches itself
+    lock_small = GenerationEngine(cfg, params, max_len=max_len,
+                                  max_batch=slots // 2)
+    lockstep = GenerationEngine(cfg, params, max_len=max_len, max_batch=slots)
     paged = ContinuousBatchingEngine(
         cfg, params, max_len=max_len, max_slots=slots, page_size=16
     )
 
-    def run_lockstep(batch_size):
-        for i in range(0, n, batch_size):
-            lockstep.generate(_fresh(trace[i:i + batch_size]))
-
-    def run_paged():
-        return paged.generate(_fresh(trace))
-
-    def timed(fn):
-        fn()  # warm: compile this path
+    def timed(engine):
+        _drain(engine, _fresh(trace))  # warm: compile this path
         t0 = time.perf_counter()
-        out = fn()
+        out = _drain(engine, _fresh(trace))
         return time.perf_counter() - t0, out
 
     # the honest baseline runs at the SAME concurrency as the paged engine;
     # the small-batch row shows how lockstep degrades as padding/straggler
     # waste grows with batch width
-    lock_small_s, _ = timed(lambda: run_lockstep(slots // 2))
-    lock_s, _ = timed(lambda: run_lockstep(slots))
-    paged_s, results = timed(run_paged)
+    lock_small_s, _ = timed(lock_small)
+    lock_s, _ = timed(lockstep)
+    paged_s, results = timed(paged)
 
     row(f"serve_lockstep_b{slots//2}", lock_small_s * 1e6,
         f"tok_per_s={useful/lock_small_s:.1f}")
@@ -249,8 +256,7 @@ def bench_serving_shared_prefix(quick: bool):
 
     from repro.configs import ARCHS, reduced
     from repro.models import build_model
-    from repro.serving import ContinuousBatchingEngine
-    from repro.serving.engine import Request
+    from repro.serving import ContinuousBatchingEngine, Request
 
     cfg = reduced(ARCHS["smollm-360m"])
     model = build_model(cfg)
@@ -284,11 +290,11 @@ def bench_serving_shared_prefix(quick: bool):
         for k in engine.cache.stats:    # stats describe this run only
             engine.cache.stats[k] = 0
         t0 = time.perf_counter()
-        out = engine.generate(_fresh(trace))
+        out = _drain(engine, _fresh(trace))
         return time.perf_counter() - t0, out, dict(engine.cache.stats)
 
-    pr1.generate(_fresh(trace))  # warm: compile each path
-    new.generate(_fresh(trace))
+    _drain(pr1, _fresh(trace))  # warm: compile each path
+    _drain(new, _fresh(trace))
     # background load on shared CPU swings >2x between runs; alternate the
     # engines and take each one's best so drift doesn't pick the winner
     pr1_s, pr1_res, _ = one_run(pr1)

@@ -16,8 +16,7 @@ from repro.checkpoint import CheckpointManager
 from repro.configs import ARCHS, describe, reduced
 from repro.data import DataConfig, SyntheticCorpus
 from repro.models import build_model
-from repro.serving import GenerationEngine
-from repro.serving.engine import Request
+from repro.serving import GenerationEngine, Request
 from repro.train import AdamWConfig, init_train_state, make_train_step
 
 
@@ -54,12 +53,16 @@ def main():
         print("checkpoint roundtrip OK (sha256-verified)")
 
     engine = GenerationEngine(cfg, jax.tree.map(jnp.asarray, state["params"]), max_len=96)
-    results = engine.generate([
-        Request(uid="a", prompt=[5, 6, 7], max_new_tokens=8),
-        Request(uid="b", prompt=[9, 10], max_new_tokens=8),
-    ])
-    for r in results:
-        print(f"generated[{r.uid}]: {r.tokens}")
+    handles = [
+        engine.submit(Request(uid="a", prompt=[5, 6, 7], max_new_tokens=8)),
+        engine.submit(Request(uid="b", prompt=[9, 10], max_new_tokens=8)),
+    ]
+    while not engine.idle:
+        engine.step()
+    for h in handles:
+        r = h.result()
+        print(f"generated[{r.uid}]: {r.tokens} ({r.finish_reason.value}, "
+              f"ttft {r.ttft * 1e3:.0f} ms)")
 
 
 if __name__ == "__main__":

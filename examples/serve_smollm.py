@@ -1,26 +1,80 @@
-"""Serving example: continuous batching from the bus with autoscaling.
+"""Streaming serving example: submit -> RequestHandle -> watch TTFT live.
 
-Requests flow through the Kafka-analogue topic, engine workers admit them
-into in-flight paged-KV decode slots, the HPA-analogue scales workers with
-consumer lag. Pass ``--engine lockstep`` to compare against the old
-synchronous micro-batcher.
+Drives the continuous-batching engine through the request-lifecycle API
+(``repro.serving.api``): requests are submitted with per-request
+SamplingParams, the engine is stepped explicitly, and tokens are printed AS
+THEY ARRIVE — the first token of each request is flagged with its measured
+time-to-first-token, which is the whole point of a streaming serving API
+(the old example only saw tokens after a request fully completed). One
+request is cancelled mid-stream to show the typed lifecycle.
+
+For the bus-driven multi-worker driver with autoscaling, see
+``python -m repro.launch.serve``.
 
 Run: PYTHONPATH=src python examples/serve_smollm.py
 """
 
-import subprocess
-import sys
+import time
+
+import jax
+
+from repro.configs import ARCHS, reduced
+from repro.models import build_model
+from repro.serving import (
+    ContinuousBatchingEngine,
+    Request,
+    SamplingParams,
+)
 
 
 def main():
-    cmd = [
-        sys.executable, "-m", "repro.launch.serve",
-        "--arch", "smollm-360m", "--reduced",
-        "--requests", "32", "--max-new", "8", "--max-batch", "4",
-        "--workdir", "experiments/serving",
-    ] + sys.argv[1:]
-    print("+", " ".join(cmd))
-    raise SystemExit(subprocess.call(cmd))
+    cfg = reduced(ARCHS["smollm-360m"])
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    engine = ContinuousBatchingEngine(cfg, params, max_len=128, max_slots=4)
+
+    handles = {
+        h.uid: h
+        for h in (
+            engine.submit(Request("greedy", prompt=[1, 2, 3],
+                                  max_new_tokens=10)),
+            engine.submit(Request("sampled", prompt=[5, 6, 7, 8],
+                                  sampling=SamplingParams(
+                                      temperature=0.8, top_k=50, top_p=0.9,
+                                      seed=42, max_new_tokens=10))),
+            engine.submit(Request("doomed", prompt=[9, 10, 11],
+                                  max_new_tokens=64)),
+        )
+    }
+    print(f"submitted {len(handles)} requests; streaming:\n")
+
+    t0 = time.perf_counter()
+    while not engine.idle:
+        for ev in engine.step():
+            h = handles[ev.uid]
+            if ev.kind == "token":
+                if ev.index == 0:  # first token: TTFT is now measurable
+                    print(f"[{ev.uid:>7}] FIRST token {ev.token:4d} "
+                          f"(ttft {h.ttft * 1e3:.1f} ms)")
+                else:
+                    print(f"[{ev.uid:>7}] token {ev.token:4d} (#{ev.index})")
+            elif ev.kind == "finish":
+                print(f"[{ev.uid:>7}] finished: {ev.finish_reason.value}")
+        # show cancellation mid-decode: stop `doomed` once it has streamed
+        # a few tokens (its 64-token budget would otherwise dominate)
+        doomed = handles["doomed"]
+        if not doomed.done and len(doomed.tokens) >= 3:
+            print(f"[ doomed] cancelling after {len(doomed.tokens)} tokens")
+            doomed.cancel()
+    wall = time.perf_counter() - t0
+
+    print(f"\nall requests settled in {wall * 1e3:.0f} ms:")
+    for uid, h in handles.items():
+        r = h.result()
+        itl = (f", itl_mean {sum(r.itl) / len(r.itl) * 1e3:.1f} ms"
+               if r.itl else "")
+        print(f"  {uid:>7}: {r.finish_reason.value:<9} tokens={r.tokens} "
+              f"ttft {r.ttft * 1e3:.1f} ms{itl}")
 
 
 if __name__ == "__main__":

@@ -1,17 +1,24 @@
-"""Serving driver: continuous-batching generation behind a bus topic.
+"""Serving driver: protocol engines behind a bus topic, streaming deltas.
 
-Requests land on the ``requests`` topic (Kafka analogue); engine workers
-admit them straight into in-flight decode slots (paged KV cache, one static
-decode shape — see ``serving/engine.py``) and publish to ``responses``.
+Requests land on the ``requests`` topic (Kafka analogue). ONE engine-agnostic
+worker loop drives any :class:`repro.serving.EngineCore` implementation —
+paged continuous batching or the lockstep baseline — through the same
+lifecycle: pull up to ``engine.capacity()`` messages, parse them with the
+shared boundary parser (every sampling field survives; the old per-engine
+parsers dropped ``temperature``), ``submit()``, and publish each
+:class:`StreamEvent` to ``responses`` as it happens — per-token ``delta``
+messages first, then one terminal ``finish`` message with the full output
+and a typed ``finish_reason``, so consumers observe streaming output before
+completion.
+
+Admission order is pluggable (``--admission fifo|priority|deadline``).
 Prompts prefill in fixed-size chunks interleaved with decode
 (``--prefill-chunk``, 0 restores whole-prompt prefill) and identical prompt
 prefixes are served from shared copy-on-write pages (``--no-prefix-sharing``
 to disable; ``--shared-prefix N`` synthesizes the pipeline-rerun workload
 that exercises it). The run prints p50/p90/p99 time-to-first-token and
 inter-token latency. The HPA analogue watches consumer lag and scales
-workers in [min,max]. The old lockstep micro-batcher stays available via
-``--engine lockstep`` (and is the fallback for families without a paged
-decode path). CPU-runnable with reduced configs:
+workers in [min,max]. CPU-runnable with reduced configs:
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --reduced \
       --requests 24 --shared-prefix 32
@@ -36,6 +43,8 @@ def main() -> int:
     ap.add_argument("--max-batch", type=int, default=4,
                     help="lockstep micro-batch size / paged slot count")
     ap.add_argument("--engine", choices=["paged", "lockstep"], default="paged")
+    ap.add_argument("--admission", choices=["fifo", "priority", "deadline"],
+                    default="fifo", help="admission policy for every worker")
     ap.add_argument("--prefill-chunk", type=int, default=64,
                     help="paged engine: prefill chunk size; 0 restores the "
                          "whole-prompt bucketed prefill")
@@ -50,12 +59,18 @@ def main() -> int:
     from repro.configs import get_arch, reduced
     from repro.core import TopicBus
     from repro.core.autoscaler import Autoscaler, AutoscalerConfig
-    from repro.core.bus import Consumer
     from repro.core.events import EventLog
     from repro.core.registry import ServiceRegistry
     from repro.models import build_model
-    from repro.serving import ContinuousBatchingEngine, GenerationEngine
-    from repro.serving.engine import Request
+    from repro.serving import (
+        ContinuousBatchingEngine,
+        DeadlineAdmission,
+        FIFOAdmission,
+        GenerationEngine,
+        PriorityAdmission,
+        format_latency,
+        request_from_message,
+    )
 
     cfg = get_arch(args.arch)
     if args.reduced:
@@ -73,13 +88,17 @@ def main() -> int:
     shared = list(range(2, 2 + args.shared_prefix))
     max_len = 64 + args.shared_prefix + args.max_new
 
-    # ---- producer: enqueue requests ----
+    # ---- producer: enqueue requests (mixed sampling params, so the full
+    # Request surface travels through the bus, not just uid/prompt) ----
     for i in range(args.requests):
         bus.publish(
             "requests",
             {"uid": f"r{i}",
              "prompt": shared + [1 + (i % 30), 2, 3 + (i % 7)],
-             "max_new_tokens": args.max_new},
+             "max_new_tokens": args.max_new,
+             "temperature": 0.7 if i % 4 == 3 else 0.0,
+             "seed": i,
+             "priority": i % 3},
         )
 
     group = "servers"
@@ -89,60 +108,80 @@ def main() -> int:
                          target_lag_per_replica=args.max_batch * 2),
         events=events,
     )
+    policies = {"fifo": FIFOAdmission, "priority": PriorityAdmission,
+                "deadline": DeadlineAdmission}
+
+    def make_engine():
+        admission = policies[args.admission]()
+        if use_paged:
+            return ContinuousBatchingEngine(
+                cfg, params, max_len=max_len,
+                max_slots=max(args.max_batch, 2),
+                prefill_chunk=args.prefill_chunk or None,
+                prefix_sharing=not args.no_prefix_sharing,
+                admission=admission,
+            )
+        return GenerationEngine(cfg, params, max_len=max_len,
+                                max_batch=args.max_batch, admission=admission)
+
     done: dict[str, list[int]] = {}
-    latencies: list = []  # Result objects, for TTFT/ITL percentiles
+    latencies: list = []  # Results, for TTFT/ITL percentiles
     lock = threading.Lock()
 
-    def publish(results):
-        for r in results:
-            bus.publish("responses", {"uid": r.uid, "tokens": r.tokens})
-            with lock:
-                done[r.uid] = r.tokens
-                latencies.append(r)
+    def finish(uid: str, result) -> None:
+        """Publish one terminal response and record it for the driver."""
+        bus.publish("responses", {
+            "uid": uid, "event": "finish",
+            "tokens": result.tokens if result else [],
+            "finish_reason": result.finish_reason.value if result else "rejected",
+            "error": result.error if result else None,
+        })
+        with lock:
+            done[uid] = result.tokens if result else []
+            if result is not None:
+                latencies.append(result)
 
-    def paged_worker(wid: int, stop: threading.Event):
-        engine = ContinuousBatchingEngine(
-            cfg, params, max_len=max_len, max_slots=max(args.max_batch, 2),
-            prefill_chunk=args.prefill_chunk or None,
-            prefix_sharing=not args.no_prefix_sharing,
-        )
+    def worker(wid: int, stop: threading.Event):
+        """THE worker loop: engine-agnostic, protocol-driven, streaming."""
+        engine = make_engine()
         registry.register("generate", f"pod://server-{wid}", f"server-{wid}")
+        handles = {}
         while not stop.is_set():
-            # admit straight from the bus into free decode slots
-            n = engine.admit_from_bus(
-                bus, "requests", group, max_msgs=engine.cache.free_slot_count
-            )
-            for uid, err in engine.drain_rejections():
-                bus.publish("responses", {"uid": uid, "error": err, "tokens": []})
-                with lock:
-                    done[uid] = []
+            pulled = 0
+            for m in bus.consume("requests", group, limit=engine.capacity()):
+                try:
+                    req = request_from_message(m.value)
+                except (ValueError, KeyError, TypeError) as e:
+                    v = m.value
+                    uid = v.get("uid", "?") if isinstance(v, dict) else "?"
+                    bus.publish("responses", {
+                        "uid": str(uid), "event": "finish", "tokens": [],
+                        "finish_reason": "rejected", "error": str(e),
+                    })
+                    with lock:
+                        done[str(uid)] = []
+                else:
+                    h = engine.submit(req)
+                    if h.done:  # rejected at the API boundary
+                        finish(h.uid, h.result())
+                    else:
+                        handles[h.uid] = h
+                        pulled += 1
+                bus.commit("requests", group, m.offset + 1)
             if engine.idle:
-                if not n and bus.lag("requests", group) == 0:
+                if not pulled and bus.lag("requests", group) == 0:
                     return
                 time.sleep(0.01)
                 continue
-            publish(engine.step())
-
-    def lockstep_worker(wid: int, stop: threading.Event):
-        engine = GenerationEngine(cfg, params, max_len=max_len)
-        registry.register("generate", f"pod://server-{wid}", f"server-{wid}")
-        consumer = Consumer(bus, "requests", group)
-        while not stop.is_set():
-            batch: list[Request] = []
-
-            def collect(msg):
-                v = msg.value
-                batch.append(Request(v["uid"], list(v["prompt"]), v["max_new_tokens"]))
-
-            n = consumer.poll(collect, max_msgs=args.max_batch)
-            if not n:
-                if bus.lag("requests", group) == 0:
-                    return
-                time.sleep(0.01)
-                continue
-            publish(engine.generate(batch))
-
-    worker = paged_worker if use_paged else lockstep_worker
+            for ev in engine.step():
+                if ev.kind == "token":
+                    bus.publish("responses", {
+                        "uid": ev.uid, "event": "delta",
+                        "token": ev.token, "index": ev.index,
+                    })
+                elif ev.kind == "finish":
+                    h = handles.pop(ev.uid, None)
+                    finish(ev.uid, h.result() if h else None)
 
     threads: list[threading.Thread] = []
     stop = threading.Event()
@@ -164,15 +203,29 @@ def main() -> int:
     print(f"served {len(done)}/{args.requests} requests in {wall:.1f}s "
           f"({len(done)*args.max_new/wall:.1f} tok/s), "
           f"engine={'paged' if use_paged else 'lockstep'}, "
-          f"peak workers={len(threads)}")
-    from repro.serving import format_latency
-
+          f"admission={args.admission}, peak workers={len(threads)}")
     summary = format_latency(latencies)
-    if summary != "no_latency_data":  # paged engine records per-request latency
+    if summary != "no_latency_data":
         print(summary)
     autoscales = events.history("autoscale")
     print("autoscale events:", [(e["old"], e["new"]) for e in autoscales])
     assert len(done) == args.requests
+
+    # streaming invariant: every served request's first delta is observable
+    # on the bus BEFORE its terminal finish message
+    first_delta: dict[str, int] = {}
+    finish_at: dict[str, int] = {}
+    for m in bus.read("responses"):
+        uid, event = m.value["uid"], m.value["event"]
+        if event == "delta":
+            first_delta.setdefault(uid, m.offset)
+        elif event == "finish":
+            finish_at[uid] = m.offset
+    streamed = [u for u, toks in done.items() if toks]
+    assert all(first_delta[u] < finish_at[u] for u in streamed), \
+        "deltas must precede completion on the bus"
+    print(f"streaming: {sum(len(t) for t in done.values())} deltas published "
+          f"before {len(finish_at)} completions")
     return 0
 
 

@@ -143,3 +143,54 @@ def swiglu(x, w_gate, w_up, w_down, constrain=None):
     if constrain is not None:
         h = constrain(h, "batch", "seq", "ff")
     return jnp.einsum("bsf,fd->bsd", h, w_down)
+
+
+# ---------------------------------------------------------------------------
+# sampling (the fused sample step shared by every serving engine)
+# ---------------------------------------------------------------------------
+
+
+def sample_tokens(
+    logits: jax.Array,   # (B, Vp) — padded vocab ok, sliced to `vocab`
+    temps: jax.Array,    # (B,) f32; <= 0 means greedy (filters ignored)
+    top_ks: jax.Array,   # (B,) int32; 0 disables top-k
+    top_ps: jax.Array,   # (B,) f32; 1.0 disables top-p
+    seeds: jax.Array,    # (B,) int32 per-request RNG seed
+    idx: jax.Array,      # (B,) int32 token index within each request
+    vocab: int,
+) -> jax.Array:
+    """Per-row temperature / top-k / top-p sampling, one fused dispatch.
+
+    RNG is keyed off ``(seed, token_index)`` per row — NEVER off an
+    engine-global step counter — so a request reproduces the same stream no
+    matter which slot it lands in, how it is batched, or whether it was
+    preempted and regenerated. Sampling uses the Gumbel-max trick over the
+    filtered logits; greedy rows (``temps <= 0``) take the plain argmax.
+
+    The top-k/top-p filters cost one vocab sort per row per step. That is
+    fine for the CPU/reference path and small reduced vocabs; a
+    Pallas-fused filter is future kernel work, not an API concern.
+    """
+    lg = logits[..., :vocab].astype(jnp.float32)
+    greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+
+    def one(row, temp, k, p, seed, i):
+        v = row.shape[-1]
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), i)
+        desc = jnp.sort(row)[::-1]
+        # top-k: keep logits >= the k-th largest (k=0 -> keep all)
+        kth = desc[jnp.clip(jnp.where(k > 0, k, v) - 1, 0, v - 1)]
+        row = jnp.where(row < kth, -jnp.inf, row)
+        t = jnp.maximum(temp, 1e-6)
+        # top-p (nucleus) over the top-k-filtered distribution: keep the
+        # smallest prefix of descending probabilities whose mass reaches p
+        probs = jax.nn.softmax(row / t)
+        p_desc = jnp.sort(probs)[::-1]
+        csum = jnp.cumsum(p_desc)
+        cutoff = jnp.where(p >= 1.0, 0.0, p_desc[jnp.argmax(csum >= p)])
+        row = jnp.where(probs < cutoff, -jnp.inf, row)
+        g = jax.random.gumbel(key, row.shape, jnp.float32)
+        return jnp.argmax(row / t + g).astype(jnp.int32)
+
+    sampled = jax.vmap(one)(lg, temps, top_ks, top_ps, seeds, idx)
+    return jnp.where(temps > 0.0, sampled, greedy)

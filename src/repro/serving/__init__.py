@@ -1,27 +1,49 @@
-"""Serving layer: generation engines over a paged, prefix-shared KV cache.
+"""Serving layer: one engine protocol over a paged, prefix-shared KV cache.
 
-``GenerationEngine`` is the lockstep micro-batching baseline;
-``ContinuousBatchingEngine`` is the production path — continuous admission,
-chunked prefill interleaved with decode, and copy-on-write prefix sharing
-(see ``docs/serving.md`` for the full design).
+``repro.serving.api`` is the single public surface — :class:`EngineCore`
+(``submit``/``step``/``cancel``/``abort_all``), :class:`SamplingParams`,
+:class:`RequestHandle` streaming, typed :class:`FinishReason`, and pluggable
+:class:`AdmissionPolicy` queues. ``GenerationEngine`` is the lockstep
+micro-batching baseline; ``ContinuousBatchingEngine`` is the production path
+— continuous admission, chunked prefill interleaved with decode, and
+copy-on-write prefix sharing (see ``docs/serving.md`` for the full design).
 """
 
-from repro.serving.engine import (
-    ContinuousBatchingEngine,
-    GenerationEngine,
+from repro.serving.api import (
+    AdmissionPolicy,
+    DeadlineAdmission,
+    EngineCore,
+    FIFOAdmission,
+    FinishReason,
+    PriorityAdmission,
     Request,
+    RequestHandle,
     Result,
+    SamplingParams,
+    StreamEvent,
+    request_from_message,
 )
+from repro.serving.engine import ContinuousBatchingEngine, GenerationEngine
 from repro.serving.kv_cache import PagedKVCache, PagePool
 from repro.serving.metrics import format_latency, latency_percentiles
 
 __all__ = [
+    "AdmissionPolicy",
     "ContinuousBatchingEngine",
+    "DeadlineAdmission",
+    "EngineCore",
+    "FIFOAdmission",
+    "FinishReason",
     "GenerationEngine",
     "PagedKVCache",
     "PagePool",
+    "PriorityAdmission",
     "Request",
+    "RequestHandle",
     "Result",
+    "SamplingParams",
+    "StreamEvent",
     "format_latency",
     "latency_percentiles",
+    "request_from_message",
 ]

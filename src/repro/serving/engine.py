@@ -1,41 +1,52 @@
 """Generation engines: lockstep micro-batching and continuous batching.
 
-``GenerationEngine`` is the original synchronous batcher kept as the serving
-baseline (and for model families without a paged decode path): every request
-in a micro-batch is padded to the longest prompt and the whole batch decodes
-until the slowest request finishes.
+Both engines implement the :class:`repro.serving.api.EngineCore` protocol —
+``submit() -> RequestHandle``, ``step() -> list[StreamEvent]``,
+``cancel(uid)``, ``abort_all()`` — over the shared lifecycle machinery in
+:class:`repro.serving.api.EngineBase`, so the bus worker, benchmarks and the
+workflow scheduler drive them identically. Sampling (per-request temperature
+/ top-k / top-p / seed) runs through ONE fused sample step
+(``models.common.sample_tokens``) keyed off ``(seed, token_index)``, so a
+request's token stream is independent of batch placement and survives
+preemption byte-for-byte.
 
-``ContinuousBatchingEngine`` is the hot-path replacement: a paged KV cache
+``GenerationEngine`` is the original synchronous batcher kept as the serving
+baseline (and for model families without a paged decode path): it adapts the
+protocol by chunking its micro-batches into steps — one ``step()`` call
+forms a padded micro-batch and prefills it, each further call runs one
+decode step over the whole batch, and the batch retires when every row has
+finished (rows that stop early are masked, not evicted).
+
+``ContinuousBatchingEngine`` is the hot path: a paged KV cache
 (`kv_cache.PagedKVCache`) shares one fixed-width decode batch between
 sequences of different lengths, new requests are admitted into free slots as
 others finish, and the jitted decode step sees one static shape — continuous
-admission never retriggers compilation. Requests can be admitted straight
-from a ``core.bus`` topic (:meth:`ContinuousBatchingEngine.admit_from_bus`).
+admission never retriggers compilation.
 
 Two serving features layer on top of the paged cache:
 
 * **Chunked prefill** (``prefill_chunk=N``, the default): prompts are split
   into fixed-size chunks and at most ONE chunk runs per engine step,
   interleaved with the decode step — a long prompt never stalls in-flight
-  decodes for more than one chunk's latency. One jitted chunk function
-  (static chunk shape) covers every prompt length; there is no per-bucket
-  compile. ``prefill_chunk=None`` restores the PR-1 whole-prompt bucketed
-  prefill (and is the automatic path for vlm prompts, whose vision embeds
-  don't chunk).
+  decodes for more than one chunk's latency. ``prefill_chunk=None`` restores
+  the whole-prompt bucketed prefill (and is the automatic path for vlm
+  prompts, whose vision embeds don't chunk).
 * **Prefix sharing** (``prefix_sharing=True``, chunked mode only): prompts
   are matched against the cache's prefix index at admission; full pages
   holding an identical prefix are mapped copy-on-write instead of
   recomputed, and the request skips straight to its first novel chunk.
 
-Per-request latency is recorded on each :class:`Result` — ``ttft`` (enqueue
-to first token) and ``itl`` (successive decode-token gaps) — so callers can
-report p50/p90/p99 without instrumenting the engine.
+Admission order is pluggable (``admission=`` takes any
+:class:`repro.serving.api.AdmissionPolicy`; FIFO by default). Preemption
+under page-pool pressure requeues the youngest sequences transparently —
+their already-streamed deltas are never re-emitted — unless
+``max_preemptions`` is exceeded, in which case the request finishes with
+``FinishReason.PREEMPTED``.
 """
 
 from __future__ import annotations
 
 import time
-from collections import deque
 from dataclasses import dataclass, field
 
 import jax
@@ -43,59 +54,149 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import build_model
+from repro.models.common import sample_tokens
+from repro.serving.api import (
+    AdmissionPolicy,
+    EngineBase,
+    FinishReason,
+    Request,
+    RequestHandle,
+    Result,
+    StreamEvent,
+    validate_request,
+)
 from repro.serving.kv_cache import NULL_PAGE, PagedKVCache, cdiv, write_prefill_pages
 
-
-@dataclass
-class Request:
-    uid: str
-    prompt: list[int]
-    max_new_tokens: int = 16
-    temperature: float = 0.0
-    # optional caller-supplied arrival time for TTFT; when None the engine
-    # stamps enqueue time itself (engine-side, the Request is not mutated)
-    arrival_t: float | None = None
+__all__ = [
+    "ContinuousBatchingEngine",
+    "GenerationEngine",
+    "Request",
+    "Result",
+]
 
 
 @dataclass
-class Result:
-    uid: str
-    tokens: list[int] = field(default_factory=list)
-    ttft: float | None = None      # seconds, enqueue -> first token
-    itl: list[float] = field(default_factory=list)  # inter-token gaps (s)
+class _Row:
+    """One row of a lockstep micro-batch."""
+
+    request: Request
+    handle: RequestHandle
+    done: bool = False
 
 
-class GenerationEngine:
-    def __init__(self, cfg, params, *, max_len: int = 256, seed: int = 0):
+class GenerationEngine(EngineBase):
+    """Lockstep micro-batching engine (protocol adapter over padded batches).
+
+    ``step()`` semantics: with no batch in flight, pull up to ``max_batch``
+    requests from the admission queue, left-pad to the longest prompt,
+    prefill and sample each row's first token. Every further ``step()`` runs
+    one decode step over the whole batch. Rows finish independently (length
+    / stop / cancel) and are masked until the slowest row retires the batch
+    — the classic lockstep cost the continuous batcher removes.
+    """
+
+    def __init__(self, cfg, params, *, max_len: int = 256, seed: int = 0,
+                 max_batch: int = 8,
+                 admission: AdmissionPolicy | None = None):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.params = params
         self.max_len = max_len
-        self._key = jax.random.key(seed)
+        self.max_batch = max_batch
         self._prefill = jax.jit(
             lambda p, b: self.model.prefill(p, b, self.max_len)
         )
         self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
+        # jitted (per batch width): eager vmap would re-trace the sampler's
+        # per-row body on every decode step; greedy_only is static so
+        # all-greedy batches pay a plain argmax (same trick as the paged
+        # engine's fused decode step)
+        def _sample_fn(lg, temps, tks, tps, seeds, idx, greedy_only):
+            if greedy_only:
+                return jnp.argmax(
+                    lg[..., :cfg.vocab_size], axis=-1
+                ).astype(jnp.int32)
+            return sample_tokens(lg, temps, tks, tps, seeds, idx,
+                                 cfg.vocab_size)
 
-    def _sample(self, logits: jax.Array, temps: np.ndarray) -> jax.Array:
-        """Per-request temperatures: row i is sampled with temps[i]."""
-        if (temps <= 0.0).all():
-            return jnp.argmax(
-                logits[..., : self.cfg.vocab_size], axis=-1
-            ).astype(jnp.int32)
-        self._key, sub = jax.random.split(self._key)
-        return _sample_rows(
-            logits, jnp.asarray(temps, jnp.float32), sub, self.cfg.vocab_size
-        )
+        self._sample = jax.jit(_sample_fn, static_argnums=(6,))
+        self._init_api(admission=admission, seed=seed)
+        self._batch: list[_Row] | None = None
+        self._bstate: dict | None = None
 
-    def generate(self, requests: list[Request]) -> list[Result]:
-        """Serve one micro-batch of requests synchronously."""
-        if not requests:
-            return []
-        b = len(requests)
-        plen = max(len(r.prompt) for r in requests)
+    # -- EngineBase hooks ----------------------------------------------
+    def _validate(self, request: Request) -> None:
+        validate_request(request, max_len=self.max_len)
+
+    def _cancel_active(self, uid: str) -> bool:
+        if self._batch is None:
+            return False
+        for row in self._batch:
+            if row.handle.uid == uid and not row.done:
+                row.done = True
+                self._finish_handle(row.handle, FinishReason.CANCELLED)
+                self._retire_if_done()
+                return True
+        return False
+
+    def _retire_if_done(self) -> None:
+        if self._batch is not None and all(r.done for r in self._batch):
+            self._batch = None
+            self._bstate = None
+
+    # -- protocol -------------------------------------------------------
+    @property
+    def idle(self) -> bool:
+        return not (len(self.admission) or self._batch or self._events)
+
+    def capacity(self) -> int:
+        if self._batch is not None:
+            return 0
+        return max(0, self.max_batch - len(self.admission))
+
+    def step(self) -> list[StreamEvent]:
+        now = time.perf_counter()
+        self._expire_queue(now)
+        if self._batch is None:
+            # batch bound: rows are left-padded to the longest prompt and
+            # decode until the slowest row finishes, so the batch occupies
+            # max(plen) + max(max_new) cache positions — admit only while
+            # that fits max_len (a lone request always does: validated)
+            reqs: list[Request] = []
+            plen = new = 0
+            while len(reqs) < self.max_batch:
+                cand = self.admission.peek(now)
+                if cand is None:
+                    break
+                c_plen = max(plen, len(cand.prompt))
+                c_new = max(new, cand.sampling.max_new_tokens)
+                if reqs and c_plen + c_new > self.max_len:
+                    break
+                plen, new = c_plen, c_new
+                reqs.append(self.admission.pop(now))
+            if reqs:
+                self._start_batch(reqs)
+        else:
+            st = self._bstate
+            st["cache"], logits = self._decode(
+                self.params, st["cache"], st["tok"][:, None]
+            )
+            st["step"] += 1
+            st["tok"] = self._sample(
+                logits, st["temps"], st["tks"], st["tps"], st["seeds"],
+                jnp.full((len(self._batch),), st["step"], jnp.int32),
+                st["greedy_only"],
+            )
+            self._harvest(np.asarray(st["tok"]))
+        self._retire_if_done()
+        return self._drain_events()
+
+    # -- internals ------------------------------------------------------
+    def _start_batch(self, reqs: list[Request]) -> None:
+        b = len(reqs)
+        plen = max(len(r.prompt) for r in reqs)
         toks = np.zeros((b, plen), np.int32)
-        for i, r in enumerate(requests):
+        for i, r in enumerate(reqs):
             toks[i, plen - len(r.prompt):] = r.prompt  # left-pad
         batch = {"tokens": jnp.asarray(toks)}
         if self.cfg.family == "vlm":
@@ -107,21 +208,33 @@ class GenerationEngine:
             batch["frames"] = jnp.zeros(
                 (b, plen, self.cfg.d_model), jnp.dtype(self.cfg.dtype)
             )
-
         cache, logits = self._prefill(self.params, batch)
-        results = [Result(r.uid) for r in requests]
-        max_new = max(r.max_new_tokens for r in requests)
-        temps = np.array([r.temperature for r in requests], np.float32)
-        tok = self._sample(logits, temps)
-        for i, r in enumerate(results):
-            r.tokens.append(int(tok[i]))
-        for _ in range(max_new - 1):
-            cache, logits = self._decode(self.params, cache, tok[:, None])
-            tok = self._sample(logits, temps)
-            for i, r in enumerate(results):
-                if len(r.tokens) < requests[i].max_new_tokens:
-                    r.tokens.append(int(tok[i]))
-        return results
+        rows = [_Row(r, self._handles[r.uid]) for r in reqs]
+        sp = [r.sampling for r in reqs]
+        st = {
+            "cache": cache,
+            "step": 0,
+            "greedy_only": all(s.temperature <= 0.0 for s in sp),
+            "temps": jnp.asarray([s.temperature for s in sp], jnp.float32),
+            "tks": jnp.asarray([s.top_k for s in sp], jnp.int32),
+            "tps": jnp.asarray([s.top_p for s in sp], jnp.float32),
+            "seeds": jnp.asarray([row.handle.seed for row in rows], jnp.int32),
+        }
+        st["tok"] = self._sample(
+            logits, st["temps"], st["tks"], st["tps"], st["seeds"],
+            jnp.zeros((b,), jnp.int32), st["greedy_only"],
+        )
+        self._batch, self._bstate = rows, st
+        self._harvest(np.asarray(st["tok"]))
+
+    def _harvest(self, toks: np.ndarray) -> None:
+        now = time.perf_counter()
+        idx = self._bstate["step"]
+        for i, row in enumerate(self._batch):
+            if row.done:
+                continue
+            if self._deliver(row.handle, int(toks[i]), idx, now):
+                row.done = True
 
 
 # ---------------------------------------------------------------------------
@@ -132,35 +245,20 @@ class GenerationEngine:
 @dataclass
 class _Seq:
     request: Request
-    tokens: list[int]
+    handle: RequestHandle
+    tokens: list[int]   # this ATTEMPT's tokens (feed decode; the handle owns
+                        # the emitted stream, which survives preemption)
     order: int = 0      # admission sequence number (preemption picks youngest)
     phase: str = "decode"   # "prefill" until the whole prompt is cached
     prefill_pos: int = 0    # prompt positions already resident in pages
-    ttft: float | None = None
-    itl: list[float] = field(default_factory=list)
-    last_t: float = 0.0     # wall time of the previous emitted token
 
 
-def _sample_rows(
-    logits: jax.Array,  # (B, Vp) f32
-    temps: jax.Array,   # (B,) f32; <= 0 means greedy
-    key: jax.Array,
-    vocab: int,
-) -> jax.Array:
-    lg = logits[..., :vocab]
-    greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
-    sampled = jax.random.categorical(
-        key, lg / jnp.maximum(temps, 1e-6)[:, None], axis=-1
-    ).astype(jnp.int32)
-    return jnp.where(temps > 0.0, sampled, greedy)
-
-
-class ContinuousBatchingEngine:
+class ContinuousBatchingEngine(EngineBase):
     """Paged-KV continuous batcher for decoder-only attention families.
 
     * Prompts prefill in fixed-size chunks (one jitted dispatch per chunk,
       static shape), at most one chunk per step, interleaved with decode —
-      see the module docstring. ``prefill_chunk=None`` restores the PR-1
+      see the module docstring. ``prefill_chunk=None`` restores the
       whole-prompt bucketed prefill.
     * Admission consults the prefix index: requests sharing a cached prefix
       map those full pages copy-on-write and skip to their first novel chunk.
@@ -185,6 +283,8 @@ class ContinuousBatchingEngine:
         attn_impl: str | None = None,
         prefill_chunk: int | None = 64,
         prefix_sharing: bool = True,
+        admission: AdmissionPolicy | None = None,
+        max_preemptions: int | None = None,
     ):
         assert not cfg.is_encoder_decoder, "paged engine is decoder-only"
         assert cfg.family in ("dense", "moe", "vlm"), (
@@ -199,6 +299,7 @@ class ContinuousBatchingEngine:
         self.nf = cfg.num_frontend_tokens if cfg.family == "vlm" else 0
         self.max_len = max_len
         self.max_slots = max_slots
+        self.max_preemptions = max_preemptions
         if prefill_chunk == 0:  # CLI convention: 0 disables chunking
             prefill_chunk = None
         if prefill_chunk is not None and prefill_chunk < 1:
@@ -217,91 +318,82 @@ class ContinuousBatchingEngine:
             page_size=page_size,
             num_pages=num_pages,
         )
-        self._base_key = jax.random.key(seed)
-        self._ticks = 0  # sampling-event counter, folded into the RNG key
+        self._init_api(admission=admission, seed=seed)
+        self.stats.update({"decode_steps": 0, "prefills": 0,
+                           "prefill_chunks": 0, "preemptions": 0})
 
         # ONE dispatch per decode step: model step + sampling fused, logits
-        # never leave the device. Shapes are static, so this compiles once.
-        # The sampled tokens and advanced lengths are returned device-side:
-        # on steps with no admission/eviction they feed the next step
-        # directly, so the steady-state loop transfers nothing to the device.
+        # never leave the device. Shapes are static, so this compiles once
+        # per value of ``greedy_only`` — a host-known flag (recomputed with
+        # the device mirrors) that lets all-greedy batches skip the per-row
+        # top-k/top-p/seeded sampler entirely; the filters only cost when a
+        # sampled request is actually in flight. The sampled tokens,
+        # advanced lengths and advanced sample indices are returned
+        # device-side: on steps with no admission/eviction they feed the
+        # next step directly, so the steady-state loop transfers nothing to
+        # the device.
         def decode_and_sample(params, pages, bt, lens, active, tokens, temps,
-                              tick):
+                              tks, tps, seeds, idx, greedy_only):
             pages, logits = self.model.decode_step_paged(
                 params, pages, bt, lens, tokens
             )
-            key = jax.random.fold_in(self._base_key, tick)
-            toks = _sample_rows(logits, temps, key, cfg.vocab_size)
-            return pages, toks[:, None], lens + active
+            if greedy_only:
+                toks = jnp.argmax(
+                    logits[..., :cfg.vocab_size], axis=-1
+                ).astype(jnp.int32)
+            else:
+                toks = sample_tokens(logits, temps, tks, tps, seeds, idx,
+                                     cfg.vocab_size)
+            return pages, toks[:, None], lens + active, idx + active
 
-        self._decode = jax.jit(decode_and_sample, donate_argnums=(1,))
+        self._decode = jax.jit(decode_and_sample, donate_argnums=(1,),
+                               static_argnums=(11,))
         self._prefill_fns: dict[int, object] = {}
         self._chunk_fn = None
-        self.waiting: deque[Request] = deque()
         self._slots: dict[int, _Seq] = {}
-        self._done: list[Result] = []
-        self.rejections: list[tuple[str, str]] = []
-        self.stats = {"decode_steps": 0, "prefills": 0, "prefill_chunks": 0,
-                      "tokens": 0, "rejected": 0, "preemptions": 0}
         self._admit_counter = 0
-        self._arrivals: dict[str, float] = {}  # uid -> enqueue time (TTFT)
         # device mirrors of the host tables; rebuilt only when stale
         self._dirty = True
+        self._greedy_only = True
         self._bt_dev = self._lens_dev = self._active_dev = None
         self._toks_dev = self._temps_dev = None
+        self._tks_dev = self._tps_dev = self._seeds_dev = self._idx_dev = None
+
+    # ------------------------------------------------------------------
+    # EngineBase hooks
+    # ------------------------------------------------------------------
+    def _validate(self, request: Request) -> None:
+        validate_request(request, max_len=self.max_len, extra_ctx=self.nf)
+        ctx = self.nf + len(request.prompt)
+        worst = cdiv(ctx + request.sampling.max_new_tokens,
+                     self.cache.page_size)
+        if worst > self.cache.num_pages - 1:
+            raise ValueError(
+                f"request {request.uid}: needs {worst} KV pages, pool has "
+                f"{self.cache.num_pages - 1} — it could never be scheduled"
+            )
+
+    def _cancel_active(self, uid: str) -> bool:
+        for slot, seq in list(self._slots.items()):
+            if seq.request.uid == uid:
+                self._finish_handle(seq.handle, FinishReason.CANCELLED)
+                self._finish_slot(slot)
+                return True
+        return False
+
+    # ------------------------------------------------------------------
+    # protocol surface
+    # ------------------------------------------------------------------
+    @property
+    def idle(self) -> bool:
+        return not (len(self.admission) or self._slots or self._events)
+
+    def capacity(self) -> int:
+        return max(0, self.cache.free_slot_count - len(self.admission))
 
     # ------------------------------------------------------------------
     # admission
     # ------------------------------------------------------------------
-    def enqueue(self, req: Request) -> None:
-        ctx = self.nf + len(req.prompt)
-        if ctx + req.max_new_tokens > self.max_len:
-            raise ValueError(
-                f"request {req.uid}: context {ctx}+{req.max_new_tokens} "
-                f"exceeds engine max_len={self.max_len}"
-            )
-        worst = cdiv(ctx + req.max_new_tokens, self.cache.page_size)
-        if worst > self.cache.num_pages - 1:
-            raise ValueError(
-                f"request {req.uid}: needs {worst} KV pages, pool has "
-                f"{self.cache.num_pages - 1} — it could never be scheduled"
-            )
-        # arrival is tracked engine-side (keyed by uid, cleared on finish):
-        # mutating the caller's Request would corrupt TTFT on resubmission
-        self._arrivals.setdefault(
-            req.uid,
-            req.arrival_t if req.arrival_t is not None else time.perf_counter(),
-        )
-        self.waiting.append(req)
-
-    def admit_from_bus(self, bus, topic: str, group: str, max_msgs: int = 32) -> int:
-        """Pull pending requests from a ``core.bus`` topic into the waiting
-        queue (at-least-once: each message is committed after enqueue).
-
-        Malformed or unservable messages are rejected — recorded in
-        ``self.rejections`` / ``stats['rejected']`` — and still committed,
-        so one poison message never wedges the consumer group."""
-        n = 0
-        for m in bus.consume(topic, group, limit=max_msgs):
-            v = m.value
-            try:
-                self.enqueue(Request(
-                    v["uid"], list(v["prompt"]),
-                    int(v.get("max_new_tokens", 16)),
-                    float(v.get("temperature", 0.0)),
-                ))
-                n += 1
-            except (ValueError, KeyError, TypeError) as e:
-                uid = v.get("uid", "?") if isinstance(v, dict) else "?"
-                self.rejections.append((str(uid), str(e)))
-                self.stats["rejected"] += 1
-            bus.commit(topic, group, m.offset + 1)
-        return n
-
-    def drain_rejections(self) -> list[tuple[str, str]]:
-        out, self.rejections = self.rejections, []
-        return out
-
     def _bucket(self, plen: int) -> int:
         b = 16
         while b < plen:
@@ -316,7 +408,7 @@ class ContinuousBatchingEngine:
             s_total = self.nf + bucket
 
             def fn(params, batch, idx, k_pages, v_pages, row, valid_len,
-                   temp, tick):
+                   temp, tk, tp, rseed):
                 cache, logits = self.model.prefill(
                     params, batch, s_total, logits_index=idx
                 )
@@ -324,8 +416,10 @@ class ContinuousBatchingEngine:
                     k_pages, v_pages, cache["k"][:, 0], cache["v"][:, 0],
                     row, valid_len,
                 )
-                key = jax.random.fold_in(self._base_key, tick)
-                tok = _sample_rows(logits, temp[None], key, self.cfg.vocab_size)
+                tok = sample_tokens(
+                    logits, temp[None], tk[None], tp[None], rseed[None],
+                    jnp.zeros((1,), jnp.int32), self.cfg.vocab_size,
+                )
                 return k_pages, v_pages, tok[0]
 
             self._prefill_fns[bucket] = jax.jit(fn, donate_argnums=(3, 4))
@@ -337,43 +431,39 @@ class ContinuousBatchingEngine:
         The sampled token is only meaningful on a prompt's final chunk."""
         if self._chunk_fn is None:
 
-            def fn(params, k_pages, v_pages, tokens, row, start, valid, temp,
-                   tick):
+            def fn(params, k_pages, v_pages, tokens, row, start, valid,
+                   temp, tk, tp, rseed):
                 pages, logits = self.model.prefill_chunk(
                     params, {"k": k_pages, "v": v_pages}, row, tokens, start,
                     valid,
                 )
-                key = jax.random.fold_in(self._base_key, tick)
-                tok = _sample_rows(logits[None], temp[None], key,
-                                   self.cfg.vocab_size)
+                tok = sample_tokens(
+                    logits[None], temp[None], tk[None], tp[None],
+                    rseed[None], jnp.zeros((1,), jnp.int32),
+                    self.cfg.vocab_size,
+                )
                 return pages["k"], pages["v"], tok[0]
 
             self._chunk_fn = jax.jit(fn, donate_argnums=(1, 2))
         return self._chunk_fn
 
-    def _finish(self, slot: int, seq: _Seq) -> Result:
-        res = Result(seq.request.uid, seq.tokens, ttft=seq.ttft, itl=seq.itl)
+    def _finish_slot(self, slot: int) -> None:
+        """Release a finished/cancelled sequence's slot and pages."""
         self.cache.release(slot)
         self._slots.pop(slot, None)
-        self._arrivals.pop(res.uid, None)
         self._dirty = True
-        return res
 
     def _first_token(self, slot: int, seq: _Seq, tok: int) -> None:
-        """Prompt fully cached: record the sampled first token + TTFT."""
+        """Prompt fully cached: deliver the sampled first token (attempt
+        index 0 — after a preemption the handle de-duplicates it)."""
         now = time.perf_counter()
         seq.tokens.append(tok)
         seq.phase = "decode"
-        seq.last_t = now
-        arrival = self._arrivals.get(seq.request.uid)
-        if arrival is not None:
-            seq.ttft = now - arrival
-        self.stats["tokens"] += 1
         self.stats["prefills"] += 1
-        if seq.request.max_new_tokens <= 1:
-            # lands in _done, harvested by THIS step (admit/prefill run
-            # before the harvest) — not delayed to the next one
-            self._done.append(self._finish(slot, seq))
+        if self._deliver(seq.handle, tok, 0, now):
+            # finish event lands in THIS step's batch (admit/prefill run
+            # before the decode harvest) — not delayed to the next one
+            self._finish_slot(slot)
         self._dirty = True
 
     def _pending_prefix_gain(self, tokens: list[int]) -> int:
@@ -399,9 +489,13 @@ class ContinuousBatchingEngine:
         return best
 
     def _admit(self) -> int:
+        now = time.perf_counter()
+        self._expire_queue(now)
         admitted = 0
-        while self.waiting:
-            req = self.waiting[0]
+        while True:
+            req = self.admission.peek(now)
+            if req is None:
+                break
             plen = len(req.prompt)
             ctx = self.nf + plen
             tokens = req.prompt if self.prefix_sharing else None
@@ -411,7 +505,8 @@ class ContinuousBatchingEngine:
                     break  # a longer shared prefix lands within a few chunks
             if not self.cache.can_admit(ctx, tokens):
                 break
-            self.waiting.popleft()
+            self.admission.pop(now)
+            handle = self._handles[req.uid]
             slot, cached = self.cache.admit(ctx, tokens)
             self._admit_counter += 1
 
@@ -420,8 +515,8 @@ class ContinuousBatchingEngine:
                 # starting at the first position not covered by the shared
                 # prefix. The slot stays masked out of decode until then.
                 self._slots[slot] = _Seq(
-                    req, [], order=self._admit_counter, phase="prefill",
-                    prefill_pos=cached,
+                    req, handle, [], order=self._admit_counter,
+                    phase="prefill", prefill_pos=cached,
                 )
                 self._dirty = True
                 admitted += 1
@@ -436,17 +531,19 @@ class ContinuousBatchingEngine:
                 batch["vision_embeds"] = jnp.zeros(
                     (1, self.nf, self.cfg.d_model), jnp.dtype(self.cfg.dtype)
                 )
-            self._ticks += 1
+            sp = req.sampling
             k_pages, v_pages, tok = self._prefill_fn(bucket)(
                 self.params, batch, jnp.asarray(ctx - 1, jnp.int32),
                 self.cache.k_pages, self.cache.v_pages,
                 self.cache.device_row(slot),
                 jnp.asarray(ctx, jnp.int32),
-                jnp.asarray(req.temperature, jnp.float32),
-                self._ticks,
+                jnp.asarray(sp.temperature, jnp.float32),
+                jnp.asarray(sp.top_k, jnp.int32),
+                jnp.asarray(sp.top_p, jnp.float32),
+                jnp.asarray(handle.seed, jnp.int32),
             )
             self.cache.set_pages(k_pages, v_pages)
-            seq = _Seq(req, [], order=self._admit_counter)
+            seq = _Seq(req, handle, [], order=self._admit_counter)
             self._slots[slot] = seq
             self._first_token(slot, seq, int(tok))
             admitted += 1
@@ -472,12 +569,15 @@ class ContinuousBatchingEngine:
         valid = min(c, len(prompt) - start)
         toks = np.zeros((c,), np.int32)
         toks[:valid] = prompt[start:start + valid]
-        self._ticks += 1
+        sp = seq.request.sampling
         k_pages, v_pages, tok = self._chunk_prefill_fn()(
             self.params, self.cache.k_pages, self.cache.v_pages,
             jnp.asarray(toks), self.cache.device_row(slot),
             jnp.asarray(start, jnp.int32), jnp.asarray(valid, jnp.int32),
-            jnp.asarray(seq.request.temperature, jnp.float32), self._ticks,
+            jnp.asarray(sp.temperature, jnp.float32),
+            jnp.asarray(sp.top_k, jnp.int32),
+            jnp.asarray(sp.top_p, jnp.float32),
+            jnp.asarray(seq.handle.seed, jnp.int32),
         )
         self.cache.set_pages(k_pages, v_pages)
         seq.prefill_pos = start + valid
@@ -489,19 +589,35 @@ class ContinuousBatchingEngine:
         return True
 
     def _preempt(self, slot: int) -> None:
-        """Evict a sequence and requeue its request (regenerated from
-        scratch later) to free pages under pool pressure."""
+        """Evict a sequence to free pages under pool pressure. The request
+        requeues and regenerates from scratch — already-streamed deltas are
+        de-duplicated, so consumers never see a token twice — unless it has
+        exceeded ``max_preemptions``, in which case it finishes
+        ``FinishReason.PREEMPTED``."""
         seq = self._slots.pop(slot)
         self.cache.release(slot)
-        self.waiting.appendleft(seq.request)
         self.stats["preemptions"] += 1
         self._dirty = True
+        h = seq.handle
+        h.preemptions += 1
+        if (self.max_preemptions is not None
+                and h.preemptions > self.max_preemptions):
+            self._finish_handle(
+                h, FinishReason.PREEMPTED,
+                error=f"request {h.uid}: preempted {h.preemptions} times "
+                      f"(max_preemptions={self.max_preemptions})",
+            )
+        else:
+            self._events.append(
+                StreamEvent(h.uid, "preempted", t=time.perf_counter())
+            )
+            self.admission.requeue(seq.request, h.arrival)
 
     def _ensure_capacity(self) -> None:
         """Give every DECODING slot a writable page for its next position —
         growing at page boundaries, copying a shared (refcount > 1) page
         anywhere else — preempting the youngest sequences if the pool runs
-        dry. A lone sequence can always grow (enqueue rejects requests that
+        dry. A lone sequence can always grow (submit rejects requests that
         exceed the whole pool), so this terminates with at least one slot
         making progress."""
         order = sorted(
@@ -521,14 +637,10 @@ class ContinuousBatchingEngine:
     # ------------------------------------------------------------------
     # stepping
     # ------------------------------------------------------------------
-    @property
-    def idle(self) -> bool:
-        return not (self.waiting or self._slots or self._done)
-
-    def step(self) -> list[Result]:
+    def step(self) -> list[StreamEvent]:
         """Admit, run (at most) one prefill chunk, run one decode step over
-        all decoding slots, evict finished sequences. Returns the requests
-        that completed."""
+        all decoding slots, evict finished sequences. Returns the lifecycle
+        events produced (token deltas, finishes, preemptions)."""
         self._admit()
         ran = self._prefill_step()
         # the one-chunk-per-step cap exists to bound decode stalls; with no
@@ -540,16 +652,23 @@ class ContinuousBatchingEngine:
         ):
             self._admit()
             ran = self._prefill_step()
-        finished, self._done = self._done, []
         if not any(q.phase == "decode" for q in self._slots.values()):
-            return finished
+            return self._drain_events()
 
         self._ensure_capacity()
         if not any(q.phase == "decode" for q in self._slots.values()):
-            return finished  # preemption can empty the decode set
+            return self._drain_events()  # preemption can empty the decode set
         if self._dirty:  # admission/eviction/page-growth: refresh mirrors
+            self._greedy_only = all(
+                q.request.sampling.temperature <= 0.0
+                for q in self._slots.values() if q.phase == "decode"
+            )
             tokens = np.zeros((self.max_slots, 1), np.int32)
             temps = np.zeros((self.max_slots,), np.float32)
+            tks = np.zeros((self.max_slots,), np.int32)
+            tps = np.ones((self.max_slots,), np.float32)
+            seeds = np.zeros((self.max_slots,), np.int32)
+            idx = np.zeros((self.max_slots,), np.int32)
             active = np.zeros((self.max_slots,), np.int32)
             # fresh host copies: slots still prefilling are masked to the
             # null page / length 0 so the decode write lands in the sink
@@ -562,7 +681,12 @@ class ContinuousBatchingEngine:
                     continue
                 live[slot] = True
                 tokens[slot, 0] = seq.tokens[-1]
-                temps[slot] = seq.request.temperature
+                sp = seq.request.sampling
+                temps[slot] = sp.temperature
+                tks[slot] = sp.top_k
+                tps[slot] = sp.top_p
+                seeds[slot] = seq.handle.seed
+                idx[slot] = len(seq.tokens)
                 active[slot] = 1
             bt[~live] = NULL_PAGE
             lens[~live] = 0
@@ -571,12 +695,17 @@ class ContinuousBatchingEngine:
             self._active_dev = jnp.asarray(active)
             self._toks_dev = jnp.asarray(tokens)
             self._temps_dev = jnp.asarray(temps)
+            self._tks_dev = jnp.asarray(tks)
+            self._tps_dev = jnp.asarray(tps)
+            self._seeds_dev = jnp.asarray(seeds)
+            self._idx_dev = jnp.asarray(idx)
             self._dirty = False
         pages = {"k": self.cache.k_pages, "v": self.cache.v_pages}
-        self._ticks += 1
-        pages, self._toks_dev, self._lens_dev = self._decode(
+        pages, self._toks_dev, self._lens_dev, self._idx_dev = self._decode(
             self.params, pages, self._bt_dev, self._lens_dev,
-            self._active_dev, self._toks_dev, self._temps_dev, self._ticks,
+            self._active_dev, self._toks_dev, self._temps_dev,
+            self._tks_dev, self._tps_dev, self._seeds_dev, self._idx_dev,
+            self._greedy_only,
         )
         self.cache.set_pages(pages["k"], pages["v"])
         self.stats["decode_steps"] += 1
@@ -587,21 +716,8 @@ class ContinuousBatchingEngine:
             if seq.phase != "decode":
                 continue
             self.cache.append(slot)
-            seq.tokens.append(int(toks[slot]))
-            seq.itl.append(now - seq.last_t)
-            seq.last_t = now
-            self.stats["tokens"] += 1
-            if len(seq.tokens) >= seq.request.max_new_tokens:
-                finished.append(self._finish(slot, seq))
-        return finished
-
-    def generate(self, requests: list[Request]) -> list[Result]:
-        """Drain a request list through the continuous batcher; results come
-        back in submission order."""
-        for r in requests:
-            self.enqueue(r)
-        done: dict[str, Result] = {}
-        while not self.idle:
-            for res in self.step():
-                done[res.uid] = res
-        return [done[r.uid] for r in requests]
+            tok = int(toks[slot])
+            seq.tokens.append(tok)
+            if self._deliver(seq.handle, tok, len(seq.tokens) - 1, now):
+                self._finish_slot(slot)
+        return self._drain_events()

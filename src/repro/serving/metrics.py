@@ -1,8 +1,9 @@
 """Latency summaries over engine Results (single source for the
 percentile/format logic used by ``launch/serve.py`` and ``benchmarks/run.py``).
 
-``ttft``/``itl`` are recorded per-request by ``ContinuousBatchingEngine``
-(see ``engine.Result``); lockstep Results carry neither and are skipped.
+``ttft``/``itl`` are stamped per-request by the ``RequestHandle`` lifecycle
+machinery (``serving/api.py``), so every protocol engine — paged and
+lockstep alike — reports them; Results lacking latency data are skipped.
 """
 
 from __future__ import annotations

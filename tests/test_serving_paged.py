@@ -339,8 +339,8 @@ def test_bus_poison_message_is_rejected_and_committed(smollm, tmp_path):
     assert uid == "bad" and "max_len" in err
     served = []
     while not eng.idle:
-        served.extend(eng.step())
-    assert [r.uid for r in served] == ["good"]
+        served.extend(ev.uid for ev in eng.step() if ev.kind == "finish")
+    assert served == ["good"]
 
 
 # ---------------------------------------------------------------------------
@@ -532,20 +532,16 @@ def test_chunked_prefill_interleaves_with_decode(smollm):
     cfg, model, params = smollm
     eng = ContinuousBatchingEngine(cfg, params, max_len=128, max_slots=2,
                                    page_size=8, prefill_chunk=8)
-    eng.enqueue(Request("short", [1, 2, 3], max_new_tokens=6))
+    short = eng.submit(Request("short", [1, 2, 3], max_new_tokens=6))
     eng.step()  # short: single-chunk prefill + first token
     long_prompt = list(range(1, 81))  # 10 chunks of 8
-    eng.enqueue(Request("long", long_prompt, max_new_tokens=2))
-    finished = []
+    long = eng.submit(Request("long", long_prompt, max_new_tokens=2))
     order = []
     while not eng.idle:
-        for res in eng.step():
-            finished.append(res)
-            order.append(res.uid)
+        order.extend(ev.uid for ev in eng.step() if ev.kind == "finish")
     assert order == ["short", "long"]
-    by_uid = {r.uid: r for r in finished}
-    assert len(by_uid["short"].tokens) == 6
-    assert len(by_uid["long"].tokens) == 2
+    assert len(short.tokens) == 6
+    assert len(long.tokens) == 2
     # decode steps ran while the long prompt was still chunking
     assert eng.stats["prefill_chunks"] >= 10
     assert eng.stats["decode_steps"] >= 5
@@ -572,11 +568,12 @@ def test_engine_admits_from_bus(smollm, tmp_path):
         })
     eng = ContinuousBatchingEngine(cfg, params, max_len=32, max_slots=2,
                                    page_size=8)
-    served = {}
+    served: dict[str, list[int]] = {}
     while bus.lag("requests", "g0") > 0 or not eng.idle:
         eng.admit_from_bus(bus, "requests", "g0",
                            max_msgs=eng.cache.free_slot_count)
-        for res in eng.step():
-            served[res.uid] = res.tokens
+        for ev in eng.step():
+            if ev.kind == "token":  # streamed deltas rebuild the outputs
+                served.setdefault(ev.uid, []).append(ev.token)
     assert sorted(served) == [f"b{i}" for i in range(5)]
     assert all(len(t) == 4 for t in served.values())

@@ -1,0 +1,103 @@
+"""Serving API surface checker: fail CI on unreviewed drift.
+
+Renders every public name exported by ``repro.serving`` — classes with
+their ``__init__`` and public-method signatures, functions, enums with
+their members — into a canonical text form and compares it against the
+reviewed snapshot in ``tools/serving_api.txt``. Any mismatch (a renamed
+method, a changed default, a dropped export) fails with a diff, so the
+public serving surface can only change together with an intentional
+snapshot update in the same PR.
+
+Check:  PYTHONPATH=src python tools/check_api.py
+Update: PYTHONPATH=src python tools/check_api.py --update
+"""
+
+from __future__ import annotations
+
+import argparse
+import difflib
+import enum
+import inspect
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+SNAPSHOT = ROOT / "tools" / "serving_api.txt"
+MODULE = "repro.serving"
+
+
+def _sig(fn) -> str:
+    try:
+        return str(inspect.signature(fn))
+    except (ValueError, TypeError):
+        return "(signature unavailable)"
+
+
+def _class_lines(name: str, cls: type) -> list[str]:
+    if issubclass(cls, enum.Enum):
+        members = ", ".join(f"{m.name}={m.value!r}" for m in cls)
+        return [f"enum {name}: {members}"]
+    lines = [f"class {name}{_sig(cls.__init__)}"]
+    seen = set()
+    for attr in sorted(dir(cls)):
+        if attr.startswith("_") or attr in seen:
+            continue
+        seen.add(attr)
+        member = inspect.getattr_static(cls, attr)
+        if isinstance(member, property):
+            lines.append(f"  {name}.{attr} [property]")
+        elif isinstance(member, staticmethod | classmethod):
+            lines.append(f"  {name}.{attr}{_sig(member.__func__)}")
+        elif inspect.isfunction(member):
+            lines.append(f"  {name}.{attr}{_sig(member)}")
+    return lines
+
+
+def render() -> str:
+    mod = __import__(MODULE, fromlist=["__all__"])
+    lines = [f"# Public serving API surface of {MODULE} (tools/check_api.py)"]
+    for name in sorted(mod.__all__):
+        obj = getattr(mod, name)
+        if inspect.isclass(obj):
+            lines.extend(_class_lines(name, obj))
+        elif callable(obj):
+            lines.append(f"def {name}{_sig(obj)}")
+        else:
+            lines.append(f"{name} = {obj!r}")
+    return "\n".join(lines) + "\n"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the snapshot from the current surface")
+    args = ap.parse_args()
+
+    current = render()
+    if args.update:
+        SNAPSHOT.write_text(current)
+        print(f"check_api: snapshot updated "
+              f"({len(current.splitlines())} lines)")
+        return 0
+    if not SNAPSHOT.exists():
+        print(f"FAIL check_api: missing snapshot {SNAPSHOT}; "
+              f"run with --update and review the diff")
+        return 1
+    want = SNAPSHOT.read_text()
+    if current == want:
+        print(f"check_api: serving surface matches snapshot "
+              f"({len(current.splitlines())} lines)")
+        return 0
+    diff = difflib.unified_diff(
+        want.splitlines(keepends=True), current.splitlines(keepends=True),
+        fromfile="tools/serving_api.txt (reviewed)",
+        tofile="repro.serving (current)",
+    )
+    sys.stdout.writelines(diff)
+    print("\nFAIL check_api: public serving surface drifted. If the change "
+          "is intentional, re-run with --update and commit the snapshot.")
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
