@@ -4,6 +4,11 @@ The paper itself has no tables (zero quantitative evaluation), so each
 benchmark quantifies one of its qualitative claims C1..C6. Prints
 ``name,us_per_call,derived`` CSV rows, plus kernel and step benches.
 
+The serving benches additionally emit ``experiments/BENCH_serving.json`` —
+machine-readable tok/s + TTFT/ITL p50/p90/p99 + trace config per engine —
+so the serving perf trajectory is diffable across PRs instead of living
+only in docs prose.
+
 Run: PYTHONPATH=src python -m benchmarks.run [--quick]
 """
 
@@ -19,11 +24,30 @@ from pathlib import Path
 import numpy as np
 
 ROWS: list[tuple[str, float, str]] = []
+SERVING: dict = {}  # machine-readable serving results -> BENCH_serving.json
 
 
 def row(name: str, us: float, derived: str):
     ROWS.append((name, us, derived))
     print(f"{name},{us:.1f},{derived}")
+
+
+def serving_entry(section: str, name: str, *, tok_per_s: float,
+                  results=None, **extra) -> None:
+    """Record one serving measurement for ``BENCH_serving.json``:
+    throughput, latency percentiles (when the engine reports them) and any
+    run metadata the caller wants tracked."""
+    from repro.serving import latency_percentiles
+
+    entry: dict = {"tok_per_s": round(tok_per_s, 1), **extra}
+    p = latency_percentiles(results) if results else None
+    if p is not None:
+        for key in ("ttft_ms", "itl_ms"):
+            entry[key] = {
+                q: round(v, 2) for q, v in zip(("p50", "p90", "p99"), p[key])
+            }
+        entry["itl_ms_max"] = round(p["itl_ms_max"], 2)
+    SERVING.setdefault(section, {}).setdefault("engines", {})[name] = entry
 
 
 def timeit(fn, n: int, warmup: int = 1) -> float:
@@ -190,6 +214,7 @@ def bench_serving(quick: bool):
     import jax
 
     from repro.configs import ARCHS, reduced
+    from repro.launch.mesh import describe_mesh
     from repro.models import build_model
     from repro.serving import ContinuousBatchingEngine, GenerationEngine, Request
 
@@ -221,7 +246,10 @@ def bench_serving(quick: bool):
     )
 
     def timed(engine):
+        from repro.serving.metrics import UtilizationMetrics
+
         _drain(engine, _fresh(trace))  # warm: compile this path
+        engine.utilization = UtilizationMetrics()  # gauge the timed run only
         t0 = time.perf_counter()
         out = _drain(engine, _fresh(trace))
         return time.perf_counter() - t0, out
@@ -229,8 +257,8 @@ def bench_serving(quick: bool):
     # the honest baseline runs at the SAME concurrency as the paged engine;
     # the small-batch row shows how lockstep degrades as padding/straggler
     # waste grows with batch width
-    lock_small_s, _ = timed(lock_small)
-    lock_s, _ = timed(lockstep)
+    lock_small_s, lock_small_res = timed(lock_small)
+    lock_s, lock_res = timed(lockstep)
     paged_s, results = timed(paged)
 
     row(f"serve_lockstep_b{slots//2}", lock_small_s * 1e6,
@@ -239,6 +267,20 @@ def bench_serving(quick: bool):
     row("serve_paged", paged_s * 1e6,
         f"tok_per_s={useful/paged_s:.1f};speedup={lock_s/paged_s:.2f}x")
     row("serve_paged_latency", paged_s * 1e6, _latency_summary(results))
+
+    SERVING["bench_serving"] = {"config": {
+        "arch": cfg.name, "requests": n, "prompt_len": [8, 128],
+        "max_new": [4, 64], "slots": slots, "max_len": max_len,
+        "useful_tokens": useful, "mesh": describe_mesh(paged.executor.mesh),
+    }}
+    serving_entry("bench_serving", f"lockstep_b{slots//2}",
+                  tok_per_s=useful / lock_small_s, results=lock_small_res)
+    serving_entry("bench_serving", f"lockstep_b{slots}",
+                  tok_per_s=useful / lock_s, results=lock_res)
+    serving_entry("bench_serving", "paged", tok_per_s=useful / paged_s,
+                  results=results,
+                  speedup_vs_lockstep=round(lock_s / paged_s, 2),
+                  utilization=paged.utilization.summary())
 
 
 def bench_serving_shared_prefix(quick: bool):
@@ -313,6 +355,18 @@ def bench_serving_shared_prefix(quick: bool):
     row("serve_sharedprefix_cow", new_s * 1e6,
         f"tok_per_s={useful/new_s:.1f};speedup={pr1_s/new_s:.2f}x;"
         f"prefix_tokens_reused={reused};{_latency_summary(new_res)}")
+
+    SERVING["bench_serving_shared_prefix"] = {"config": {
+        "arch": cfg.name, "requests": n, "prefix_len": 96,
+        "suffix_len": [4, 32], "max_new": [8, 32], "slots": slots,
+        "best_of": 3,
+    }}
+    serving_entry("bench_serving_shared_prefix", "pr1_whole_prefill",
+                  tok_per_s=useful / pr1_s, results=pr1_res)
+    serving_entry("bench_serving_shared_prefix", "chunked_cow",
+                  tok_per_s=useful / new_s, results=new_res,
+                  speedup_vs_pr1=round(pr1_s / new_s, 2),
+                  prefix_tokens_reused=int(reused))
 
 
 def bench_kernels(quick: bool):
@@ -417,6 +471,17 @@ def main() -> None:
     out.mkdir(exist_ok=True)
     (out / "bench_results.json").write_text(
         json.dumps([{"name": n, "us": u, "derived": d} for n, u, d in ROWS], indent=1))
+    if SERVING:
+        import jax
+
+        SERVING["meta"] = {
+            "quick": args.quick,
+            "backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+        }
+        path = out / "BENCH_serving.json"
+        path.write_text(json.dumps(SERVING, indent=1, sort_keys=True))
+        print(f"# serving results -> {path}")
 
 
 if __name__ == "__main__":

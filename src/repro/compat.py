@@ -24,6 +24,27 @@ def _get_shard_map():
 shard_map = _get_shard_map()
 
 
+def shard_map_unchecked(f, *, mesh, in_specs, out_specs):
+    """``shard_map`` with replication checking off, across jax versions.
+
+    The serving executor's step functions claim replicated (``P()``)
+    outputs that the checker cannot always prove replicated (scatters,
+    gathered logits); the kwarg disabling the check was renamed
+    ``check_rep`` -> ``check_vma`` across jax releases, so probe both.
+    """
+    for kw in ({"check_rep": False}, {"check_vma": False}):
+        try:
+            return shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+        except TypeError:
+            continue
+    # deliberately NO bare fallback: a checker-enabled shard_map would fail
+    # later at trace time with an opaque replication error — fail clearly here
+    raise TypeError(
+        "installed jax accepts neither check_rep nor check_vma on shard_map"
+    )
+
+
 def tree_leaves_with_path(tree, is_leaf=None):
     """``jax.tree.leaves_with_path`` with a tree_util fallback for old JAX."""
     fn = getattr(jax.tree, "leaves_with_path", None)

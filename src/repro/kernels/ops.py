@@ -90,16 +90,29 @@ def paged_attention(
 
     Idle slots (length 0) return zeros rather than NaN, so a continuous
     batcher can keep dead rows in the decode batch.
+
+    Shard-local contract (sharded serving): under the executor's
+    ``shard_map`` this op receives the PER-SHARD head slice — q carries
+    ``H/tp`` heads, the pools carry ``KVH/tp`` kv heads — while
+    ``block_tables``/``lengths`` are replicated (page ids are
+    shard-invariant). Heads shard in contiguous GQA groups, so the grouped
+    reshape below is exactly the local slice's own grouping and every impl
+    (Pallas and the XLA refs) works unchanged on the slice; the q/kv head
+    ratio must survive the slicing, which the divisibility check asserts.
     """
     if impl == "auto":
         impl = _auto_impl()
+    b, h, d = q.shape
+    kvh = k_pages.shape[2]
+    assert kvh and h % kvh == 0, (
+        f"q heads ({h}) must be a multiple of kv heads ({kvh}) — a sharded "
+        f"caller must slice both by the same tensor-parallel degree"
+    )
     if impl in ("naive", "xla_chunked"):
         return ref.paged_attention_ref(
             q, k_pages, v_pages, block_tables, lengths, scale=scale
         )
     if impl == "pallas":
-        b, h, d = q.shape
-        kvh = k_pages.shape[2]
         qg = q.reshape(b, kvh, h // kvh, d)
         out = paged_attention_bkgd(
             qg, k_pages, v_pages, block_tables, lengths,

@@ -18,6 +18,14 @@ scratch pattern from ``flash_attention.py``. The BlockSpec index_map reads
 pages past a sequence's length map to the reserved null page 0 and are
 skipped via ``pl.when``. GQA is native: q arrives grouped (B, KVH, G, D) and
 each grid cell computes all G grouped heads against one kv head's page.
+
+Tensor-parallel serving dispatches this kernel PER SHARD: the serving
+executor's ``shard_map`` hands each device its contiguous kv-head slice of
+the page pool (KVH/tp heads) and the matching grouped-q slice, with block
+tables and lengths replicated. Nothing in the kernel changes — the grid's
+kv-head extent is just the local ``KVH/tp``, and because pages shard only
+along the head dim, the scalar-prefetched block-table values (physical page
+ids) are identical on every shard.
 """
 
 from __future__ import annotations

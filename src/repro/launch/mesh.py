@@ -35,5 +35,25 @@ def make_host_mesh() -> Mesh:
     return _make_mesh((n,), ("data",))
 
 
+def make_serving_mesh(size: int | None = None) -> Mesh:
+    """1D ``("model",)`` mesh for the tensor-parallel serving executor.
+
+    ``size`` caps/chooses the device count (None = all local devices).
+    Built over the FIRST ``size`` devices with a plain :class:`Mesh` —
+    unlike ``jax.make_mesh`` this permits a strict subset of the host's
+    devices, which the executor needs when the model's head count only
+    divides over part of a forced multi-device CPU host.
+    """
+    import numpy as np
+
+    devices = jax.devices()
+    n = len(devices) if size is None else size
+    if not 1 <= n <= len(devices):
+        raise ValueError(
+            f"serving mesh size {n} out of range [1, {len(devices)}]"
+        )
+    return Mesh(np.asarray(devices[:n]), ("model",))
+
+
 def describe_mesh(mesh: Mesh) -> str:
     return "x".join(f"{k}={v}" for k, v in mesh.shape.items())

@@ -16,9 +16,16 @@ Prompts prefill in fixed-size chunks interleaved with decode
 (``--prefill-chunk``, 0 restores whole-prompt prefill) and identical prompt
 prefixes are served from shared copy-on-write pages (``--no-prefix-sharing``
 to disable; ``--shared-prefix N`` synthesizes the pipeline-rerun workload
-that exercises it). The run prints p50/p90/p99 time-to-first-token and
-inter-token latency. The HPA analogue watches consumer lag and scales
-workers in [min,max]. CPU-runnable with reduced configs:
+that exercises it).
+
+The paged engine's executor runs under ``shard_map`` on a ``("model",)``
+mesh; ``--mesh auto`` (default) picks the largest tensor-parallel degree
+the model's head counts allow over the local devices, ``--mesh N`` forces
+an explicit size (1 disables sharding). The run prints p50/p90/p99
+time-to-first-token and inter-token latency plus the per-step decode-slot
+occupancy and page-pool utilization gauges. The HPA analogue watches
+consumer lag and scales workers in [min,max]. CPU-runnable with reduced
+configs:
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --reduced \
       --requests 24 --shared-prefix 32
@@ -53,6 +60,11 @@ def main() -> int:
     ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
                     help="prepend a common N-token prefix to every request "
                          "(pipeline-rerun workload; exercises prefix sharing)")
+    ap.add_argument("--mesh", default="auto",
+                    help="paged engine: tensor-parallel mesh size for the "
+                         "sharded executor — 'auto' picks the largest "
+                         "feasible degree over local devices, an integer "
+                         "forces that many (1 disables sharding)")
     ap.add_argument("--workdir", default="experiments/serve_run")
     args = ap.parse_args()
 
@@ -61,6 +73,7 @@ def main() -> int:
     from repro.core.autoscaler import Autoscaler, AutoscalerConfig
     from repro.core.events import EventLog
     from repro.core.registry import ServiceRegistry
+    from repro.launch.mesh import describe_mesh, make_serving_mesh
     from repro.models import build_model
     from repro.serving import (
         ContinuousBatchingEngine,
@@ -71,12 +84,21 @@ def main() -> int:
         format_latency,
         request_from_message,
     )
+    from repro.serving.executor import (
+        default_serving_mesh,
+        place_serving_params,
+        set_default_serving_mesh,
+    )
+    from repro.serving.metrics import UtilizationMetrics
 
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
     paged_ok = not cfg.is_encoder_decoder and cfg.family in ("dense", "moe", "vlm")
     use_paged = args.engine == "paged" and paged_ok
+    if use_paged and args.mesh != "auto":
+        set_default_serving_mesh(make_serving_mesh(int(args.mesh)))
+    mesh_desc = describe_mesh(default_serving_mesh(cfg)) if use_paged else "n/a"
     workdir = Path(args.workdir)
     workdir.mkdir(parents=True, exist_ok=True)
     bus = TopicBus(workdir / "bus")
@@ -85,6 +107,12 @@ def main() -> int:
 
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
+    if use_paged:
+        # validates the mesh ONCE in the main thread (a bad --mesh N fails
+        # fast here, not inside every worker) and pre-shards the weights so
+        # all workers share one placed copy instead of each materializing
+        # their own
+        params = place_serving_params(cfg, params)
     shared = list(range(2, 2 + args.shared_prefix))
     max_len = 64 + args.shared_prefix + args.max_new
 
@@ -126,6 +154,7 @@ def main() -> int:
 
     done: dict[str, list[int]] = {}
     latencies: list = []  # Results, for TTFT/ITL percentiles
+    utilization = UtilizationMetrics()  # merged across workers
     lock = threading.Lock()
 
     def finish(uid: str, result) -> None:
@@ -146,6 +175,13 @@ def main() -> int:
         engine = make_engine()
         registry.register("generate", f"pod://server-{wid}", f"server-{wid}")
         handles = {}
+        try:
+            _worker_loop(engine, stop, handles)
+        finally:
+            with lock:
+                utilization.merge(engine.utilization)
+
+    def _worker_loop(engine, stop, handles):
         while not stop.is_set():
             pulled = 0
             for m in bus.consume("requests", group, limit=engine.capacity()):
@@ -203,10 +239,12 @@ def main() -> int:
     print(f"served {len(done)}/{args.requests} requests in {wall:.1f}s "
           f"({len(done)*args.max_new/wall:.1f} tok/s), "
           f"engine={'paged' if use_paged else 'lockstep'}, "
-          f"admission={args.admission}, peak workers={len(threads)}")
+          f"admission={args.admission}, mesh={mesh_desc}, "
+          f"peak workers={len(threads)}")
     summary = format_latency(latencies)
     if summary != "no_latency_data":
         print(summary)
+    print("utilization:", utilization.format())
     autoscales = events.history("autoscale")
     print("autoscale events:", [(e["old"], e["new"]) for e in autoscales])
     assert len(done) == args.requests

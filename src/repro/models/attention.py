@@ -15,6 +15,7 @@ from repro.kernels import ops
 from repro.models import common
 from repro.models.common import ParamSpec, apply_rope, rms_norm, rope_table
 from repro.parallel import constrain
+from repro.parallel.collectives import psum_tp
 
 NEG_INF = -1e30
 
@@ -77,7 +78,9 @@ def self_attention(
     q, k, v = _project_qkv(p, x, cfg, positions, rope)
     out = ops.flash_attention(q, k, v, causal=causal, impl=attn_impl)
     out = constrain(out, "batch", "seq", "heads", "head_dim")
-    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    # row-parallel wo: partial sum per TP shard, reduced here (identity
+    # outside a tensor_parallel context)
+    return psum_tp(jnp.einsum("bshk,hkd->bsd", out, p["wo"]))
 
 
 def self_attention_with_cache_write(
@@ -90,7 +93,7 @@ def self_attention_with_cache_write(
     q, k, v = _project_qkv(p, x, cfg, positions, rope=rope)
     out = ops.flash_attention(q, k, v, causal=True, impl=attn_impl)
     out = constrain(out, "batch", "seq", "heads", "head_dim")
-    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), (k, v)
+    return psum_tp(jnp.einsum("bshk,hkd->bsd", out, p["wo"])), (k, v)
 
 
 def decode_attention_raw(
@@ -132,7 +135,7 @@ def decode_self_attention(
     vc = constrain(vc, "cache_batch", "cache_seq", "kv_heads", "head_dim")
     out = decode_attention_raw(q, kc, vc, pos + 1, cfg.head_dim ** -0.5)
     out = out.astype(x.dtype)
-    o = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    o = psum_tp(jnp.einsum("bshk,hkd->bsd", out, p["wo"]))
     return o, {"k": kc, "v": vc}
 
 
@@ -170,8 +173,12 @@ def decode_self_attention_paged(
     out = ops.paged_attention(
         q[:, 0], kc, vc, block_tables, lengths + 1,
         scale=cfg.head_dim ** -0.5, impl=attn_impl,
-    ).astype(x.dtype)  # (S, H, Dh)
-    o = jnp.einsum("bhk,hkd->bd", out, p["wo"])[:, None, :]
+    ).astype(x.dtype)  # (S, H_local, Dh)
+    # under the serving executor's shard_map, q/kv heads and the page pool
+    # are head-sharded: each shard attends its own head slice against its
+    # own KV shard (block tables are replicated), and the row-parallel wo
+    # partial sums are reduced here
+    o = psum_tp(jnp.einsum("bhk,hkd->bd", out, p["wo"]))[:, None, :]
     return o, {"k": kc, "v": vc}
 
 
@@ -210,8 +217,8 @@ def prefill_chunk_attention_paged(
     out = ops.paged_prefill_attention(
         q[0], kc, vc, block_table, start, valid,
         scale=cfg.head_dim ** -0.5, impl=attn_impl,
-    ).astype(x.dtype)  # (C, H, Dh)
-    o = jnp.einsum("chk,hkd->cd", out, p["wo"])[None]
+    ).astype(x.dtype)  # (C, H_local, Dh)
+    o = psum_tp(jnp.einsum("chk,hkd->cd", out, p["wo"]))[None]
     return o, {"k": kc, "v": vc}
 
 

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.compat import tree_leaves_with_path
+from repro.parallel.collectives import psum_tp
 
 
 @dataclass(frozen=True)
@@ -136,13 +137,19 @@ def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
 
 
 def swiglu(x, w_gate, w_up, w_down, constrain=None):
-    """SwiGLU MLP. Weights: (D,F), (D,F), (F,D)."""
+    """SwiGLU MLP. Weights: (D,F), (D,F), (F,D).
+
+    Under a serving :func:`repro.parallel.tensor_parallel` context the ff
+    dim is sharded (gate/up column-parallel, down row-parallel) and the
+    down projection's partial sum is reduced here; outside it ``psum_tp``
+    is identity.
+    """
     g = jnp.einsum("bsd,df->bsf", x, w_gate)
     u = jnp.einsum("bsd,df->bsf", x, w_up)
     h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
     if constrain is not None:
         h = constrain(h, "batch", "seq", "ff")
-    return jnp.einsum("bsf,fd->bsd", h, w_down)
+    return psum_tp(jnp.einsum("bsf,fd->bsd", h, w_down))
 
 
 # ---------------------------------------------------------------------------

@@ -37,6 +37,7 @@ from repro.models.common import (
     swiglu,
 )
 from repro.parallel import constrain
+from repro.parallel.collectives import all_gather_logits
 
 VOCAB_PAD_MULTIPLE = 256
 
@@ -508,10 +509,10 @@ class DecoderLM:
         else:
             x = jax.lax.dynamic_slice_in_dim(x, logits_index, 1, axis=1)
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-        logits = jnp.einsum(
+        logits = all_gather_logits(jnp.einsum(
             "bsd,dv->bsv", x, self._unembed_weight(params),
             preferred_element_type=jnp.float32,
-        )[:, 0]
+        ))[:, 0]
         return cache, logits
 
     # ------------------------------------------------------------------
@@ -600,10 +601,10 @@ class DecoderLM:
             raise ValueError(cfg.family)
 
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-        logits = jnp.einsum(
+        logits = all_gather_logits(jnp.einsum(
             "bsd,dv->bsv", x, self._unembed_weight(params),
             preferred_element_type=jnp.float32,
-        )[:, 0]
+        ))[:, 0]
         return new_cache, logits
 
     # ------------------------------------------------------------------
@@ -642,10 +643,12 @@ class DecoderLM:
             body, x, (params["layers"], {"k": pages["k"], "v": pages["v"]})
         )
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-        logits = jnp.einsum(
+        # column-parallel unembed under TP serving: gather the vocab shards
+        # so sampling sees the full distribution (identity when unsharded)
+        logits = all_gather_logits(jnp.einsum(
             "bsd,dv->bsv", x, self._unembed_weight(params),
             preferred_element_type=jnp.float32,
-        )[:, 0]
+        ))[:, 0]
         return new_pages, logits
 
     # ------------------------------------------------------------------
@@ -693,8 +696,8 @@ class DecoderLM:
         )
         x = jax.lax.dynamic_slice_in_dim(x, valid - 1, 1, axis=1)
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-        logits = jnp.einsum(
+        logits = all_gather_logits(jnp.einsum(
             "bsd,dv->bsv", x, self._unembed_weight(params),
             preferred_element_type=jnp.float32,
-        )[0, 0]
+        ))[0, 0]
         return new_pages, logits

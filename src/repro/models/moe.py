@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models.common import ParamSpec
 from repro.parallel import constrain
+from repro.parallel.collectives import psum_tp
 
 
 def moe_param_specs(cfg: ModelConfig, stacked: int | None = None) -> dict:
@@ -57,12 +58,18 @@ def route(p, x, cfg: ModelConfig):
 
 
 def _expert_ffn(p, x_exp):
-    """x_exp (B, E, C, D) -> (B, E, C, D); SwiGLU per expert."""
+    """x_exp (B, E, C, D) -> (B, E, C, D); SwiGLU per expert.
+
+    The serving executor shards the expert ff dim over the model axis
+    (every TP shard holds a slice of every expert, same layout as
+    training); the down projection's partial sum reduces here — identity
+    outside a ``tensor_parallel`` context.
+    """
     g = jnp.einsum("becd,edf->becf", x_exp, p["w_gate"])
     u = jnp.einsum("becd,edf->becf", x_exp, p["w_up"])
     h = jax.nn.silu(g.astype(jnp.float32)).astype(x_exp.dtype) * u
     h = constrain(h, "batch", "experts", "expert_capacity", "ff")
-    return jnp.einsum("becf,efd->becd", h, p["w_down"])
+    return psum_tp(jnp.einsum("becf,efd->becd", h, p["w_down"]))
 
 
 MOE_SEQ_CHUNK = 4096  # dispatch-buffer bound: B x k x chunk x cf x D

@@ -7,13 +7,23 @@ from repro.parallel.axes import (
     current_mesh,
     current_rules,
 )
+from repro.parallel.collectives import (
+    all_gather_logits,
+    psum_tp,
+    tensor_parallel,
+    tp_axis,
+)
 
 __all__ = [
     "DEFAULT_RULES",
+    "all_gather_logits",
     "constrain",
     "logical_to_spec",
     "make_shardings",
+    "psum_tp",
     "sharding_context",
     "current_mesh",
     "current_rules",
+    "tensor_parallel",
+    "tp_axis",
 ]

@@ -1,9 +1,21 @@
-"""Explicit collectives via shard_map: compressed gradient all-reduce.
+"""Explicit collectives via shard_map: tensor-parallel serving + gradients.
 
 GSPMD inserts collectives implicitly everywhere else in this repo; this
-module is the one place we drop to ``jax.shard_map`` for a collective the
-compiler cannot synthesize: **error-feedback int8-compressed gradient
-all-reduce** (1-bit-Adam-family trick, here at 8 bits).
+module is where we drop to ``jax.shard_map`` for collectives the compiler
+cannot (or should not) synthesize:
+
+* **Tensor-parallel serving reductions.** The serving executor
+  (``serving/executor.py``) runs the fused decode/prefill steps under
+  ``shard_map`` on a ``("model",)`` mesh with attention heads, MLP ff and
+  (untied) unembed columns sharded Megatron-style. Model code marks the
+  reduction points with :func:`psum_tp` (row-parallel output projections:
+  attention ``wo``, MLP ``w_down``) and :func:`all_gather_logits`
+  (column-parallel unembed -> full-vocab logits for sampling). Both are
+  IDENTITY outside a :func:`tensor_parallel` context, so the same model
+  code runs unsharded (training, lockstep engine, 1-device serving)
+  without change.
+* **Error-feedback int8-compressed gradient all-reduce**
+  (1-bit-Adam-family trick, here at 8 bits).
 
     g_compressed = quantize_int8(g + error_carry)
     all-reduce(g_compressed)            # 4x fewer wire bytes than fp32
@@ -17,6 +29,8 @@ wire bytes hurt most; the carry lives in the train state.
 
 from __future__ import annotations
 
+import threading
+from contextlib import contextmanager
 from functools import partial
 
 import jax
@@ -24,6 +38,65 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
+
+# ---------------------------------------------------------------------------
+# tensor-parallel context (serving executor)
+# ---------------------------------------------------------------------------
+
+_TP = threading.local()
+
+
+@contextmanager
+def tensor_parallel(axis: str | None, *, vocab_sharded: bool = False):
+    """Declare that the enclosed model code is being traced inside a
+    ``shard_map`` over mesh axis ``axis`` with Megatron-style weight
+    sharding (heads/kv_heads/ff -> ``axis``; unembed columns too when
+    ``vocab_sharded``). :func:`psum_tp` / :func:`all_gather_logits` become
+    real collectives inside this context and stay identity outside it.
+
+    ``axis=None`` is an explicit no-op (1-device mesh / unsharded runs
+    share the code path). Thread-local, so concurrent serving workers with
+    different meshes don't interfere.
+    """
+    prev = (getattr(_TP, "axis", None), getattr(_TP, "vocab", False))
+    _TP.axis, _TP.vocab = axis, vocab_sharded and axis is not None
+    try:
+        yield
+    finally:
+        _TP.axis, _TP.vocab = prev
+
+
+def tp_axis() -> str | None:
+    """Mesh axis of the ambient :func:`tensor_parallel` context (or None)."""
+    return getattr(_TP, "axis", None)
+
+
+def psum_tp(x: jax.Array) -> jax.Array:
+    """Sum partial products over the tensor-parallel axis.
+
+    Model code calls this exactly where a row-parallel matmul leaves a
+    partial sum on each shard (attention output projection, MLP down
+    projection, MoE expert down projection). Identity outside a
+    :func:`tensor_parallel` context.
+    """
+    ax = tp_axis()
+    return jax.lax.psum(x, ax) if ax is not None else x
+
+
+def all_gather_logits(x: jax.Array) -> jax.Array:
+    """Reassemble full-vocab logits from a column-parallel unembed.
+
+    Sampling (greedy argmax / top-k / top-p) needs the whole vocab row, so
+    the shard-local logits slice is gathered (tiled) along the last axis.
+    Identity outside a :func:`tensor_parallel` context and when the vocab
+    dim is replicated (tied embeddings keep the embedding table — and thus
+    the logits — replicated; gathering replicated logits would wrongly
+    tile them).
+    """
+    ax = tp_axis()
+    if ax is None or not getattr(_TP, "vocab", False):
+        return x
+    return jax.lax.all_gather(x, ax, axis=x.ndim - 1, tiled=True)
 
 
 def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:

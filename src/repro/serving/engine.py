@@ -17,37 +17,36 @@ forms a padded micro-batch and prefills it, each further call runs one
 decode step over the whole batch, and the batch retires when every row has
 finished (rows that stop early are masked, not evicted).
 
-``ContinuousBatchingEngine`` is the hot path: a paged KV cache
-(`kv_cache.PagedKVCache`) shares one fixed-width decode batch between
-sequences of different lengths, new requests are admitted into free slots as
-others finish, and the jitted decode step sees one static shape — continuous
-admission never retriggers compilation.
+``ContinuousBatchingEngine`` is the hot path, built from two layers
+(see ``docs/serving.md`` for the full design):
 
-Two serving features layer on top of the paged cache:
+* a host-side :class:`repro.serving.scheduler.Scheduler` — admission order,
+  chunked-prefill interleaving, prefix-sharing deferral, preemption victim
+  selection, page accounting and decode-batch assembly, all plain
+  Python/numpy with no device dispatch;
+* a device-side :class:`repro.serving.executor.ModelExecutor` — the jitted
+  fused prefill/decode+sample steps, run under ``shard_map`` on a
+  ``("model",)`` mesh with attention heads tensor-parallel and the KV page
+  pool sharded along the head dimension (a 1-device mesh runs the same
+  code path unsharded).
 
-* **Chunked prefill** (``prefill_chunk=N``, the default): prompts are split
-  into fixed-size chunks and at most ONE chunk runs per engine step,
-  interleaved with the decode step — a long prompt never stalls in-flight
-  decodes for more than one chunk's latency. ``prefill_chunk=None`` restores
-  the whole-prompt bucketed prefill (and is the automatic path for vlm
-  prompts, whose vision embeds don't chunk).
-* **Prefix sharing** (``prefix_sharing=True``, chunked mode only): prompts
-  are matched against the cache's prefix index at admission; full pages
-  holding an identical prefix are mapped copy-on-write instead of
-  recomputed, and the request skips straight to its first novel chunk.
-
+The engine itself is the thin protocol adapter wiring the two: it
+translates scheduler decisions into lifecycle events and executor calls.
 Admission order is pluggable (``admission=`` takes any
 :class:`repro.serving.api.AdmissionPolicy`; FIFO by default). Preemption
 under page-pool pressure requeues the youngest sequences transparently —
 their already-streamed deltas are never re-emitted — unless
 ``max_preemptions`` is exceeded, in which case the request finishes with
-``FinishReason.PREEMPTED``.
+``FinishReason.PREEMPTED``. Chunked prefill (``prefill_chunk=N``, the
+default; ``None``/0 restores whole-prompt bucketed prefill, automatic for
+vlm prompts) and copy-on-write prefix sharing (``prefix_sharing=True``)
+behave exactly as before the split.
 """
 
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -65,7 +64,10 @@ from repro.serving.api import (
     StreamEvent,
     validate_request,
 )
-from repro.serving.kv_cache import NULL_PAGE, PagedKVCache, cdiv, write_prefill_pages
+from repro.serving.executor import ModelExecutor
+from repro.serving.kv_cache import PagedKVCache, cdiv
+from repro.serving.metrics import UtilizationMetrics
+from repro.serving.scheduler import Scheduler, Sequence
 
 __all__ = [
     "ContinuousBatchingEngine",
@@ -121,6 +123,7 @@ class GenerationEngine(EngineBase):
 
         self._sample = jax.jit(_sample_fn, static_argnums=(6,))
         self._init_api(admission=admission, seed=seed)
+        self.utilization = UtilizationMetrics()
         self._batch: list[_Row] | None = None
         self._bstate: dict | None = None
 
@@ -178,6 +181,10 @@ class GenerationEngine(EngineBase):
                 self._start_batch(reqs)
         else:
             st = self._bstate
+            self.utilization.record(
+                active=sum(not r.done for r in self._batch),
+                slots=self.max_batch,
+            )
             st["cache"], logits = self._decode(
                 self.params, st["cache"], st["tok"][:, None]
             )
@@ -238,36 +245,30 @@ class GenerationEngine(EngineBase):
 
 
 # ---------------------------------------------------------------------------
-# continuous batching
+# continuous batching (scheduler/executor split)
 # ---------------------------------------------------------------------------
-
-
-@dataclass
-class _Seq:
-    request: Request
-    handle: RequestHandle
-    tokens: list[int]   # this ATTEMPT's tokens (feed decode; the handle owns
-                        # the emitted stream, which survives preemption)
-    order: int = 0      # admission sequence number (preemption picks youngest)
-    phase: str = "decode"   # "prefill" until the whole prompt is cached
-    prefill_pos: int = 0    # prompt positions already resident in pages
 
 
 class ContinuousBatchingEngine(EngineBase):
     """Paged-KV continuous batcher for decoder-only attention families.
 
-    * Prompts prefill in fixed-size chunks (one jitted dispatch per chunk,
-      static shape), at most one chunk per step, interleaved with decode —
-      see the module docstring. ``prefill_chunk=None`` restores the
-      whole-prompt bucketed prefill.
-    * Admission consults the prefix index: requests sharing a cached prefix
-      map those full pages copy-on-write and skip to their first novel chunk.
-    * Decode runs one jitted step over ``max_slots`` fixed-width slots; slots
-      that are idle or still prefilling are masked (null block table, length
-      0) and their attention output is discarded.
-    * Sequences finish independently — their page refcounts drop (pages
-      return to the pool at zero) and the slot is refilled from the waiting
-      queue on the next step.
+    Protocol adapter over the scheduler/executor split:
+
+    * the :class:`Scheduler` decides (host-only) — admission against the
+      prefix index and the page pool, one prefill chunk per step
+      interleaved with decode, youngest-first preemption under pool
+      pressure, decode-batch assembly;
+    * the :class:`ModelExecutor` computes (device-only) — one jitted
+      sharded dispatch per chunk / per decode step over ``max_slots``
+      fixed-width slots; idle or prefilling slots are masked (null block
+      table, length 0) and their attention output discarded;
+    * this class translates between them and the
+      :class:`~repro.serving.api.EngineCore` lifecycle: handles, stream
+      events, typed finishes, preemption-transparent requeueing.
+
+    Sequences finish independently — their page refcounts drop (pages
+    return to the pool at zero) and the slot is refilled from the waiting
+    queue on the next step.
     """
 
     def __init__(
@@ -292,10 +293,6 @@ class ContinuousBatchingEngine(EngineBase):
             f"{cfg.family!r} should use GenerationEngine"
         )
         self.cfg = cfg
-        self.model = (
-            build_model(cfg, attn_impl=attn_impl) if attn_impl else build_model(cfg)
-        )
-        self.params = params
         self.nf = cfg.num_frontend_tokens if cfg.family == "vlm" else 0
         self.max_len = max_len
         self.max_slots = max_slots
@@ -318,46 +315,22 @@ class ContinuousBatchingEngine(EngineBase):
             page_size=page_size,
             num_pages=num_pages,
         )
+        self.scheduler = Scheduler(
+            self.cache,
+            prefill_chunk=prefill_chunk,
+            chunked=self._chunked,
+            prefix_sharing=self.prefix_sharing,
+            extra_ctx=self.nf,
+        )
+        self.executor = ModelExecutor(
+            cfg, params, self.cache, max_len=max_len, attn_impl=attn_impl
+        )
+        self.model = self.executor.model
+        self.params = self.executor.params
         self._init_api(admission=admission, seed=seed)
+        self.utilization = UtilizationMetrics()
         self.stats.update({"decode_steps": 0, "prefills": 0,
                            "prefill_chunks": 0, "preemptions": 0})
-
-        # ONE dispatch per decode step: model step + sampling fused, logits
-        # never leave the device. Shapes are static, so this compiles once
-        # per value of ``greedy_only`` — a host-known flag (recomputed with
-        # the device mirrors) that lets all-greedy batches skip the per-row
-        # top-k/top-p/seeded sampler entirely; the filters only cost when a
-        # sampled request is actually in flight. The sampled tokens,
-        # advanced lengths and advanced sample indices are returned
-        # device-side: on steps with no admission/eviction they feed the
-        # next step directly, so the steady-state loop transfers nothing to
-        # the device.
-        def decode_and_sample(params, pages, bt, lens, active, tokens, temps,
-                              tks, tps, seeds, idx, greedy_only):
-            pages, logits = self.model.decode_step_paged(
-                params, pages, bt, lens, tokens
-            )
-            if greedy_only:
-                toks = jnp.argmax(
-                    logits[..., :cfg.vocab_size], axis=-1
-                ).astype(jnp.int32)
-            else:
-                toks = sample_tokens(logits, temps, tks, tps, seeds, idx,
-                                     cfg.vocab_size)
-            return pages, toks[:, None], lens + active, idx + active
-
-        self._decode = jax.jit(decode_and_sample, donate_argnums=(1,),
-                               static_argnums=(11,))
-        self._prefill_fns: dict[int, object] = {}
-        self._chunk_fn = None
-        self._slots: dict[int, _Seq] = {}
-        self._admit_counter = 0
-        # device mirrors of the host tables; rebuilt only when stale
-        self._dirty = True
-        self._greedy_only = True
-        self._bt_dev = self._lens_dev = self._active_dev = None
-        self._toks_dev = self._temps_dev = None
-        self._tks_dev = self._tps_dev = self._seeds_dev = self._idx_dev = None
 
     # ------------------------------------------------------------------
     # EngineBase hooks
@@ -374,19 +347,20 @@ class ContinuousBatchingEngine(EngineBase):
             )
 
     def _cancel_active(self, uid: str) -> bool:
-        for slot, seq in list(self._slots.items()):
-            if seq.request.uid == uid:
-                self._finish_handle(seq.handle, FinishReason.CANCELLED)
-                self._finish_slot(slot)
-                return True
-        return False
+        slot = self.scheduler.find(uid)
+        if slot is None:
+            return False
+        seq = self.scheduler.release(slot)
+        self._finish_handle(seq.handle, FinishReason.CANCELLED)
+        return True
 
     # ------------------------------------------------------------------
     # protocol surface
     # ------------------------------------------------------------------
     @property
     def idle(self) -> bool:
-        return not (len(self.admission) or self._slots or self._events)
+        return not (len(self.admission) or self.scheduler.slots
+                    or self._events)
 
     def capacity(self) -> int:
         return max(0, self.cache.free_slot_count - len(self.admission))
@@ -394,99 +368,17 @@ class ContinuousBatchingEngine(EngineBase):
     # ------------------------------------------------------------------
     # admission
     # ------------------------------------------------------------------
-    def _bucket(self, plen: int) -> int:
-        b = 16
-        while b < plen:
-            b *= 2
-        return min(b, max(self.max_len - self.nf, 1))
-
-    def _prefill_fn(self, bucket: int):
-        """Legacy whole-prompt path (``prefill_chunk=None`` / vlm): ONE
-        dispatch per admission — prefill forward + page scatter + first
-        token sample, jitted per prompt-length bucket."""
-        if bucket not in self._prefill_fns:
-            s_total = self.nf + bucket
-
-            def fn(params, batch, idx, k_pages, v_pages, row, valid_len,
-                   temp, tk, tp, rseed):
-                cache, logits = self.model.prefill(
-                    params, batch, s_total, logits_index=idx
-                )
-                k_pages, v_pages = write_prefill_pages(
-                    k_pages, v_pages, cache["k"][:, 0], cache["v"][:, 0],
-                    row, valid_len,
-                )
-                tok = sample_tokens(
-                    logits, temp[None], tk[None], tp[None], rseed[None],
-                    jnp.zeros((1,), jnp.int32), self.cfg.vocab_size,
-                )
-                return k_pages, v_pages, tok[0]
-
-            self._prefill_fns[bucket] = jax.jit(fn, donate_argnums=(3, 4))
-        return self._prefill_fns[bucket]
-
-    def _chunk_prefill_fn(self):
-        """Chunked path: ONE jitted function (static chunk shape) covers
-        every prompt length — chunk forward + page scatter + sample fused.
-        The sampled token is only meaningful on a prompt's final chunk."""
-        if self._chunk_fn is None:
-
-            def fn(params, k_pages, v_pages, tokens, row, start, valid,
-                   temp, tk, tp, rseed):
-                pages, logits = self.model.prefill_chunk(
-                    params, {"k": k_pages, "v": v_pages}, row, tokens, start,
-                    valid,
-                )
-                tok = sample_tokens(
-                    logits[None], temp[None], tk[None], tp[None],
-                    rseed[None], jnp.zeros((1,), jnp.int32),
-                    self.cfg.vocab_size,
-                )
-                return pages["k"], pages["v"], tok[0]
-
-            self._chunk_fn = jax.jit(fn, donate_argnums=(1, 2))
-        return self._chunk_fn
-
-    def _finish_slot(self, slot: int) -> None:
-        """Release a finished/cancelled sequence's slot and pages."""
-        self.cache.release(slot)
-        self._slots.pop(slot, None)
-        self._dirty = True
-
-    def _first_token(self, slot: int, seq: _Seq, tok: int) -> None:
+    def _first_token(self, slot: int, seq: Sequence, tok: int) -> None:
         """Prompt fully cached: deliver the sampled first token (attempt
         index 0 — after a preemption the handle de-duplicates it)."""
         now = time.perf_counter()
         seq.tokens.append(tok)
-        seq.phase = "decode"
+        self.scheduler.begin_decode(slot)
         self.stats["prefills"] += 1
         if self._deliver(seq.handle, tok, 0, now):
             # finish event lands in THIS step's batch (admit/prefill run
             # before the decode harvest) — not delayed to the next one
-            self._finish_slot(slot)
-        self._dirty = True
-
-    def _pending_prefix_gain(self, tokens: list[int]) -> int:
-        """Longest full-page prefix of ``tokens`` that an IN-FLIGHT prefill
-        will publish to the prefix index but has not yet (its chunks haven't
-        reached those pages). Admission waits for such a prefix instead of
-        allocating private pages for content that is about to be shared —
-        without this, a burst of same-prefix requests admitted in one step
-        would get zero sharing."""
-        ps = self.cache.page_size
-        limit = self.cache._prefix_limit(tokens)
-        best = 0
-        for seq in self._slots.values():
-            if seq.phase != "prefill":
-                continue
-            other = seq.request.prompt
-            n = 0
-            for i in range(min(limit, len(other) // ps)):
-                if tokens[i * ps:(i + 1) * ps] != other[i * ps:(i + 1) * ps]:
-                    break
-                n += 1
-            best = max(best, n * ps)
-        return best
+            self.scheduler.release(slot)
 
     def _admit(self) -> int:
         now = time.perf_counter()
@@ -494,110 +386,36 @@ class ContinuousBatchingEngine(EngineBase):
         admitted = 0
         while True:
             req = self.admission.peek(now)
-            if req is None:
-                break
-            plen = len(req.prompt)
-            ctx = self.nf + plen
-            tokens = req.prompt if self.prefix_sharing else None
-            if tokens is not None:
-                matched = self.cache.match_prefix(tokens)[1]
-                if self._pending_prefix_gain(tokens) > matched:
-                    break  # a longer shared prefix lands within a few chunks
-            if not self.cache.can_admit(ctx, tokens):
+            if req is None or not self.scheduler.can_place(req):
                 break
             self.admission.pop(now)
             handle = self._handles[req.uid]
-            slot, cached = self.cache.admit(ctx, tokens)
-            self._admit_counter += 1
-
-            if self._chunked:
-                # pages claimed; chunks run one per step via _prefill_step,
-                # starting at the first position not covered by the shared
-                # prefix. The slot stays masked out of decode until then.
-                self._slots[slot] = _Seq(
-                    req, handle, [], order=self._admit_counter,
-                    phase="prefill", prefill_pos=cached,
-                )
-                self._dirty = True
-                admitted += 1
-                continue
-
-            # legacy whole-prompt path (vlm / prefill_chunk=None)
-            bucket = self._bucket(plen)
-            toks = np.zeros((1, bucket), np.int32)
-            toks[0, :plen] = req.prompt
-            batch = {"tokens": jnp.asarray(toks)}
-            if self.cfg.family == "vlm":
-                batch["vision_embeds"] = jnp.zeros(
-                    (1, self.nf, self.cfg.d_model), jnp.dtype(self.cfg.dtype)
-                )
-            sp = req.sampling
-            k_pages, v_pages, tok = self._prefill_fn(bucket)(
-                self.params, batch, jnp.asarray(ctx - 1, jnp.int32),
-                self.cache.k_pages, self.cache.v_pages,
-                self.cache.device_row(slot),
-                jnp.asarray(ctx, jnp.int32),
-                jnp.asarray(sp.temperature, jnp.float32),
-                jnp.asarray(sp.top_k, jnp.int32),
-                jnp.asarray(sp.top_p, jnp.float32),
-                jnp.asarray(handle.seed, jnp.int32),
-            )
-            self.cache.set_pages(k_pages, v_pages)
-            seq = _Seq(req, handle, [], order=self._admit_counter)
-            self._slots[slot] = seq
-            self._first_token(slot, seq, int(tok))
+            slot, seq, _ = self.scheduler.place(req, handle)
             admitted += 1
+            if not self._chunked:
+                # legacy whole-prompt path (vlm / prefill_chunk=None):
+                # one executor dispatch per admission
+                tok = self.executor.prefill_whole(req, handle.seed, slot)
+                self._first_token(slot, seq, tok)
         return admitted
 
     def _prefill_step(self) -> bool:
-        """Advance the OLDEST in-flight prefill by one fixed-size chunk.
-
-        At most one chunk runs per engine step, so concurrent decodes stall
-        for one chunk's latency at worst. Pages covered by the dispatched
-        chunk are published to the prefix index afterwards — dispatch order
-        is execution order, so a later admission can share them safely.
-        """
-        cands = [(q.order, s) for s, q in self._slots.items()
-                 if q.phase == "prefill"]
-        if not cands:
+        """Advance the oldest in-flight prefill by one fixed-size chunk
+        (scheduler picks, executor dispatches)."""
+        work = self.scheduler.next_prefill()
+        if work is None:
             return False
-        _, slot = min(cands)
-        seq = self._slots[slot]
-        prompt = seq.request.prompt
-        start = seq.prefill_pos
-        c = self.prefill_chunk
-        valid = min(c, len(prompt) - start)
-        toks = np.zeros((c,), np.int32)
-        toks[:valid] = prompt[start:start + valid]
-        sp = seq.request.sampling
-        k_pages, v_pages, tok = self._chunk_prefill_fn()(
-            self.params, self.cache.k_pages, self.cache.v_pages,
-            jnp.asarray(toks), self.cache.device_row(slot),
-            jnp.asarray(start, jnp.int32), jnp.asarray(valid, jnp.int32),
-            jnp.asarray(sp.temperature, jnp.float32),
-            jnp.asarray(sp.top_k, jnp.int32),
-            jnp.asarray(sp.top_p, jnp.float32),
-            jnp.asarray(seq.handle.seed, jnp.int32),
-        )
-        self.cache.set_pages(k_pages, v_pages)
-        seq.prefill_pos = start + valid
+        tok = self.executor.prefill_chunk(work)
         self.stats["prefill_chunks"] += 1
-        if self.prefix_sharing:
-            self.cache.register_prefix(slot, prompt, seq.prefill_pos)
-        if seq.prefill_pos == len(prompt):
-            self._first_token(slot, seq, int(tok))
+        if self.scheduler.complete_chunk(work):
+            self._first_token(work.slot, work.seq, tok)
         return True
 
-    def _preempt(self, slot: int) -> None:
-        """Evict a sequence to free pages under pool pressure. The request
-        requeues and regenerates from scratch — already-streamed deltas are
-        de-duplicated, so consumers never see a token twice — unless it has
-        exceeded ``max_preemptions``, in which case it finishes
-        ``FinishReason.PREEMPTED``."""
-        seq = self._slots.pop(slot)
-        self.cache.release(slot)
+    def _handle_preempted(self, seq: Sequence) -> None:
+        """Bookkeeping for a sequence the scheduler evicted under pool
+        pressure: requeue transparently (already-streamed deltas are never
+        re-emitted) or finish ``preempted`` past ``max_preemptions``."""
         self.stats["preemptions"] += 1
-        self._dirty = True
         h = seq.handle
         h.preemptions += 1
         if (self.max_preemptions is not None
@@ -613,27 +431,6 @@ class ContinuousBatchingEngine(EngineBase):
             )
             self.admission.requeue(seq.request, h.arrival)
 
-    def _ensure_capacity(self) -> None:
-        """Give every DECODING slot a writable page for its next position —
-        growing at page boundaries, copying a shared (refcount > 1) page
-        anywhere else — preempting the youngest sequences if the pool runs
-        dry. A lone sequence can always grow (submit rejects requests that
-        exceed the whole pool), so this terminates with at least one slot
-        making progress."""
-        order = sorted(
-            (s for s, q in self._slots.items() if q.phase == "decode"),
-            key=lambda s: self._slots[s].order,
-        )
-        for slot in order:
-            while slot in self._slots:
-                try:
-                    if self.cache.ensure_append_capacity(slot):
-                        self._dirty = True
-                    break
-                except RuntimeError:
-                    victim = max(self._slots, key=lambda s: self._slots[s].order)
-                    self._preempt(victim)
-
     # ------------------------------------------------------------------
     # stepping
     # ------------------------------------------------------------------
@@ -641,83 +438,36 @@ class ContinuousBatchingEngine(EngineBase):
         """Admit, run (at most) one prefill chunk, run one decode step over
         all decoding slots, evict finished sequences. Returns the lifecycle
         events produced (token deltas, finishes, preemptions)."""
+        sched = self.scheduler
         self._admit()
         ran = self._prefill_step()
         # the one-chunk-per-step cap exists to bound decode stalls; with no
         # decode in flight there is nothing to stall, so drain chunks
         # back-to-back until a sequence becomes decodable (cold start,
         # post-burst refill)
-        while ran and not any(
-            q.phase == "decode" for q in self._slots.values()
-        ):
+        while ran and not sched.has_decodable():
             self._admit()
             ran = self._prefill_step()
-        if not any(q.phase == "decode" for q in self._slots.values()):
+        if not sched.has_decodable():
             return self._drain_events()
 
-        self._ensure_capacity()
-        if not any(q.phase == "decode" for q in self._slots.values()):
+        for seq in sched.ensure_decode_capacity():
+            self._handle_preempted(seq)
+        if not sched.has_decodable():
             return self._drain_events()  # preemption can empty the decode set
-        if self._dirty:  # admission/eviction/page-growth: refresh mirrors
-            self._greedy_only = all(
-                q.request.sampling.temperature <= 0.0
-                for q in self._slots.values() if q.phase == "decode"
-            )
-            tokens = np.zeros((self.max_slots, 1), np.int32)
-            temps = np.zeros((self.max_slots,), np.float32)
-            tks = np.zeros((self.max_slots,), np.int32)
-            tps = np.ones((self.max_slots,), np.float32)
-            seeds = np.zeros((self.max_slots,), np.int32)
-            idx = np.zeros((self.max_slots,), np.int32)
-            active = np.zeros((self.max_slots,), np.int32)
-            # fresh host copies: slots still prefilling are masked to the
-            # null page / length 0 so the decode write lands in the sink
-            # and their (discarded) attention output reads nothing
-            bt = self.cache.block_tables.copy()
-            lens = self.cache.lengths.copy()
-            live = np.zeros((self.max_slots,), bool)
-            for slot, seq in self._slots.items():
-                if seq.phase != "decode":
-                    continue
-                live[slot] = True
-                tokens[slot, 0] = seq.tokens[-1]
-                sp = seq.request.sampling
-                temps[slot] = sp.temperature
-                tks[slot] = sp.top_k
-                tps[slot] = sp.top_p
-                seeds[slot] = seq.handle.seed
-                idx[slot] = len(seq.tokens)
-                active[slot] = 1
-            bt[~live] = NULL_PAGE
-            lens[~live] = 0
-            self._bt_dev = jnp.asarray(bt)
-            self._lens_dev = jnp.asarray(lens)
-            self._active_dev = jnp.asarray(active)
-            self._toks_dev = jnp.asarray(tokens)
-            self._temps_dev = jnp.asarray(temps)
-            self._tks_dev = jnp.asarray(tks)
-            self._tps_dev = jnp.asarray(tps)
-            self._seeds_dev = jnp.asarray(seeds)
-            self._idx_dev = jnp.asarray(idx)
-            self._dirty = False
-        pages = {"k": self.cache.k_pages, "v": self.cache.v_pages}
-        pages, self._toks_dev, self._lens_dev, self._idx_dev = self._decode(
-            self.params, pages, self._bt_dev, self._lens_dev,
-            self._active_dev, self._toks_dev, self._temps_dev,
-            self._tks_dev, self._tps_dev, self._seeds_dev, self._idx_dev,
-            self._greedy_only,
-        )
-        self.cache.set_pages(pages["k"], pages["v"])
+
+        decoding, slots = sched.occupancy()
+        used, total = sched.page_utilization()
+        self.utilization.record(active=decoding, slots=slots,
+                                pages_used=used, pages_total=total)
+        inputs = sched.build_decode_inputs() if sched.dirty else None
+        toks = self.executor.decode(inputs)
         self.stats["decode_steps"] += 1
-        toks = np.asarray(self._toks_dev)[:, 0]
         now = time.perf_counter()
-        for slot in list(self._slots):
-            seq = self._slots[slot]
-            if seq.phase != "decode":
-                continue
+        for slot, seq in sched.decoding():
             self.cache.append(slot)
             tok = int(toks[slot])
             seq.tokens.append(tok)
             if self._deliver(seq.handle, tok, len(seq.tokens) - 1, now):
-                self._finish_slot(slot)
+                sched.release(slot)
         return self._drain_events()

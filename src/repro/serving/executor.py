@@ -1,0 +1,439 @@
+"""Device-side model executor for the paged serving engine.
+
+This is the COMPUTE half of the scheduler/executor split
+(``docs/serving.md``): it owns the jitted fused prefill/decode+sample step
+functions and runs every one of them under ``shard_map`` on a 1-D
+``("model",)`` mesh (:func:`repro.launch.mesh.make_serving_mesh`), with
+Megatron-style tensor parallelism:
+
+* attention q/kv heads, MLP ff and (untied) unembed columns are sharded
+  over ``"model"``; row-parallel output projections reduce with
+  ``psum_tp`` and the vocab-sharded logits gather with
+  ``all_gather_logits`` (both marked inside the model code,
+  identity when unsharded);
+* the KV page pool is sharded along its **head** dimension
+  (``(L, P, page, KVH, Dh)`` -> ``P(None, None, None, "model", None)``),
+  so every shard holds the SAME pages for its slice of heads — block
+  tables, page ids, refcounts and the prefix index stay single host-side
+  structures in the :class:`~repro.serving.scheduler.Scheduler`;
+* everything the host feeds per step (block tables, lengths, tokens,
+  sampling params) is replicated, and the sampled tokens come back
+  replicated, so the scheduler never sees the mesh.
+
+A 1-device mesh runs the identical code path (psum/gather compile away),
+which is what keeps the conformance suite engine-shape-agnostic: the same
+engine passes it on one device and on a forced multi-device CPU host
+(``XLA_FLAGS=--xla_force_host_platform_device_count=4``; CI runs that
+variant on every PR).
+
+The mesh is chosen automatically: the largest device count that divides
+the model's effective kv heads, q heads, ff width (and padded vocab when
+the unembedding is untied). Pass ``mesh=`` explicitly, or set a process
+default with :func:`set_default_serving_mesh` /
+:func:`serving_mesh_scope` (what ``launch/serve.py --mesh`` uses) —
+the public engine signature stays mesh-free.
+"""
+
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.compat import shard_map_unchecked
+from repro.launch.mesh import make_serving_mesh
+from repro.models import build_model
+from repro.models.common import sample_tokens
+from repro.models.lm import padded_vocab
+from repro.parallel.axes import logical_to_spec
+from repro.parallel.collectives import tensor_parallel
+from repro.serving.kv_cache import write_prefill_pages
+from repro.serving.scheduler import DecodeInputs, PrefillChunk
+
+__all__ = [
+    "ModelExecutor",
+    "default_serving_mesh",
+    "pick_tp",
+    "place_serving_params",
+    "serving_mesh_scope",
+    "set_default_serving_mesh",
+    "validate_serving_mesh",
+]
+
+# (L, P, page, KVH, Dh): only the head dim is sharded, so page ids and
+# block-table entries mean the same thing on every shard
+PAGE_SPEC = P(None, None, None, "model", None)
+
+_DEFAULT_MESH: Mesh | None = None
+
+
+def set_default_serving_mesh(mesh: Mesh | None) -> None:
+    """Process-wide default mesh for engines built without an explicit one
+    (``launch/serve.py --mesh``). ``None`` restores auto-selection."""
+    global _DEFAULT_MESH
+    _DEFAULT_MESH = mesh
+
+
+@contextmanager
+def serving_mesh_scope(mesh: Mesh | None):
+    """Temporarily pin the default serving mesh (tests: force a 1-device
+    mesh next to the auto-sharded one and compare outputs)."""
+    global _DEFAULT_MESH
+    prev = _DEFAULT_MESH
+    _DEFAULT_MESH = mesh
+    try:
+        yield
+    finally:
+        _DEFAULT_MESH = prev
+
+
+def _tp_dims(cfg) -> list[int]:
+    """Tensor dims the mesh size must divide for this config."""
+    dims = [cfg.eff_kv_heads, cfg.eff_heads]
+    if cfg.d_ff:
+        dims.append(cfg.d_ff)
+    if not cfg.tie_embeddings:
+        dims.append(padded_vocab(cfg))
+    return dims
+
+
+def pick_tp(cfg, num_devices: int | None = None) -> int:
+    """Largest tensor-parallel degree <= the device count that divides every
+    sharded dim (kv heads bound it in practice: pages shard along heads)."""
+    n = num_devices if num_devices is not None else jax.device_count()
+    dims = _tp_dims(cfg)
+    tp = max(1, n)
+    while tp > 1 and any(d % tp for d in dims):
+        tp -= 1
+    return tp
+
+
+def default_serving_mesh(cfg) -> Mesh:
+    if _DEFAULT_MESH is not None:
+        return _DEFAULT_MESH
+    return make_serving_mesh(pick_tp(cfg))
+
+
+def _mesh_tp(mesh: Mesh) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+
+
+def validate_serving_mesh(cfg, mesh: Mesh) -> int:
+    """Check ``mesh`` can shard ``cfg`` (every TP dim divisible); returns
+    the TP degree. Drivers call this ONCE up front so a bad explicit
+    ``--mesh N`` fails fast in the main thread instead of crashing every
+    worker as it builds its engine."""
+    tp = _mesh_tp(mesh)
+    bad = [d for d in _tp_dims(cfg) if d % tp]
+    if bad:
+        raise ValueError(
+            f"serving mesh size {tp} does not divide sharded dims {bad} of "
+            f"{cfg.name} (kv_heads={cfg.eff_kv_heads}, "
+            f"heads={cfg.eff_heads}, d_ff={cfg.d_ff})"
+        )
+    return tp
+
+
+def _serving_param_specs(model, mesh: Mesh, vocab_sharded: bool):
+    """PartitionSpec tree for a params tree under the serving TP rules."""
+    rules = {
+        "heads": "model",
+        "kv_heads": "model",
+        "ff": "model",
+        "vocab": "model" if vocab_sharded else None,
+    }
+    is_leaf = lambda v: v is None or (
+        isinstance(v, tuple)
+        and all(isinstance(e, (str, type(None))) for e in v)
+    )
+    specs = jax.tree.map(
+        lambda ax: logical_to_spec(ax, rules=rules, mesh=mesh),
+        model.axes(), is_leaf=is_leaf,
+    )
+    # the token-embedding table is looked up by GLOBAL token id
+    # (jnp.take), so it must stay replicated even when the (untied)
+    # unembedding shards its vocab columns
+    if "embed" in specs:
+        specs["embed"] = P()
+    return specs
+
+
+def place_serving_params(cfg, params, mesh: Mesh | None = None):
+    """Shard a params tree for the serving mesh ONCE, up front.
+
+    Multi-worker drivers (``launch/serve.py``) call this before spawning
+    engines: every :class:`ModelExecutor` built from the returned tree sees
+    leaves already carrying the target sharding, and its own ``device_put``
+    is then a no-op — all workers share ONE placed copy instead of each
+    materializing its own.
+    """
+    mesh = mesh if mesh is not None else default_serving_mesh(cfg)
+    tp = validate_serving_mesh(cfg, mesh)
+    if tp == 1:
+        return params
+    vocab_sharded = not cfg.tie_embeddings
+    specs = _serving_param_specs(build_model(cfg), mesh, vocab_sharded)
+    return jax.tree.map(
+        lambda arr, spec: jax.device_put(arr, NamedSharding(mesh, spec)),
+        params, specs,
+    )
+
+
+class ModelExecutor:
+    """Owns params, page-pool device arrays and the jitted step functions.
+
+    Stateless with respect to scheduling: it executes
+    :class:`~repro.serving.scheduler.PrefillChunk` /
+    :class:`~repro.serving.scheduler.DecodeInputs` work items and keeps
+    device mirrors of the last decode batch so steady-state steps transfer
+    nothing to the device.
+    """
+
+    def __init__(self, cfg, params, cache, *, max_len: int,
+                 mesh: Mesh | None = None, attn_impl: str | None = None):
+        self.cfg = cfg
+        self.model = (
+            build_model(cfg, attn_impl=attn_impl) if attn_impl
+            else build_model(cfg)
+        )
+        self.cache = cache
+        self.max_len = max_len
+        self.nf = cfg.num_frontend_tokens if cfg.family == "vlm" else 0
+        self.mesh = mesh if mesh is not None else default_serving_mesh(cfg)
+        self.tp = validate_serving_mesh(cfg, self.mesh)
+        self.vocab_sharded = (not cfg.tie_embeddings) and self.tp > 1
+        self.param_specs = _serving_param_specs(
+            self.model, self.mesh, self.vocab_sharded
+        )
+        self.params = self._place(params)
+
+        self._decode_fns: dict[bool, object] = {}
+        self._chunk_fn = None
+        self._prefill_fns: dict[int, object] = {}
+        # device mirrors of the last decode batch (refreshed only when the
+        # scheduler reports a composition change)
+        self._greedy_only = True
+        self._bt = self._lens = self._active = None
+        self._toks = self._temps = self._tks = self._tps = None
+        self._seeds = self._idx = None
+
+    # ------------------------------------------------------------------
+    # sharding
+    # ------------------------------------------------------------------
+    def _place(self, params):
+        """Shard params + page pool onto the mesh (no-op layout on 1 dev).
+
+        When the caller pre-placed the tree (:func:`place_serving_params`,
+        the multi-worker path) every ``device_put`` here no-ops and all
+        executors share one device copy of the weights."""
+        if self.tp == 1:
+            return params
+        ns = lambda spec: NamedSharding(self.mesh, spec)
+        placed = jax.tree.map(
+            lambda arr, spec: jax.device_put(arr, ns(spec)),
+            params, self.param_specs,
+        )
+        self.cache._reshard(ns(PAGE_SPEC))
+        return placed
+
+    def _smap(self, fn, in_specs, out_specs):
+        return shard_map_unchecked(
+            fn, mesh=self.mesh, in_specs=in_specs, out_specs=out_specs
+        )
+
+    def _tp_ctx(self):
+        return tensor_parallel("model", vocab_sharded=self.vocab_sharded)
+
+    # ------------------------------------------------------------------
+    # decode
+    # ------------------------------------------------------------------
+    def _decode_fn(self, greedy_only: bool):
+        """ONE dispatch per decode step: sharded model step + sampling
+        fused, logits never leave the device (the vocab gather is an
+        on-device collective). ``greedy_only`` is a host-known flag — the
+        all-greedy compile pays a plain argmax and the per-row
+        top-k/top-p/seeded sampler only costs when a sampled request is in
+        flight. Sampled tokens / advanced lengths / advanced sample
+        indices return replicated and feed the next step directly."""
+        if greedy_only not in self._decode_fns:
+            cfg = self.cfg
+
+            def fn(params, pages, bt, lens, active, tokens, temps,
+                   tks, tps, seeds, idx):
+                with self._tp_ctx():
+                    pages, logits = self.model.decode_step_paged(
+                        params, pages, bt, lens, tokens
+                    )
+                    if greedy_only:
+                        toks = jnp.argmax(
+                            logits[..., :cfg.vocab_size], axis=-1
+                        ).astype(jnp.int32)
+                    else:
+                        toks = sample_tokens(logits, temps, tks, tps, seeds,
+                                             idx, cfg.vocab_size)
+                return pages, toks[:, None], lens + active, idx + active
+
+            page_specs = {"k": PAGE_SPEC, "v": PAGE_SPEC}
+            smapped = self._smap(
+                fn,
+                in_specs=(self.param_specs, page_specs) + (P(),) * 9,
+                out_specs=(page_specs, P(), P(), P()),
+            )
+            self._decode_fns[greedy_only] = jax.jit(
+                smapped, donate_argnums=(1,)
+            )
+        return self._decode_fns[greedy_only]
+
+    def refresh(self, inputs: DecodeInputs) -> None:
+        """Mirror a freshly assembled decode batch to the device."""
+        self._greedy_only = inputs.greedy_only
+        self._bt = jnp.asarray(inputs.block_tables)
+        self._lens = jnp.asarray(inputs.lengths)
+        self._active = jnp.asarray(inputs.active)
+        self._toks = jnp.asarray(inputs.tokens)
+        self._temps = jnp.asarray(inputs.temps)
+        self._tks = jnp.asarray(inputs.top_ks)
+        self._tps = jnp.asarray(inputs.top_ps)
+        self._seeds = jnp.asarray(inputs.seeds)
+        self._idx = jnp.asarray(inputs.idx)
+
+    def decode(self, inputs: DecodeInputs | None = None) -> np.ndarray:
+        """Run one decode step. ``inputs`` refreshes the device mirrors
+        (admission/eviction/page growth); None reuses last step's device
+        outputs — the steady-state loop transfers nothing to the device.
+        Returns the sampled token per slot, (S,) int32 on the host."""
+        if inputs is not None:
+            self.refresh(inputs)
+        pages = {"k": self.cache.k_pages, "v": self.cache.v_pages}
+        fn = self._decode_fn(self._greedy_only)
+        pages, self._toks, self._lens, self._idx = fn(
+            self.params, pages, self._bt, self._lens, self._active,
+            self._toks, self._temps, self._tks, self._tps, self._seeds,
+            self._idx,
+        )
+        self.cache.set_pages(pages["k"], pages["v"])
+        return np.asarray(self._toks)[:, 0]
+
+    # ------------------------------------------------------------------
+    # chunked prefill
+    # ------------------------------------------------------------------
+    def _chunk_prefill_fn(self):
+        """ONE jitted function (static chunk shape) covers every prompt
+        length — sharded chunk forward + page scatter + sample fused. The
+        sampled token is only meaningful on a prompt's final chunk."""
+        if self._chunk_fn is None:
+
+            def fn(params, k_pages, v_pages, tokens, row, start, valid,
+                   temp, tk, tp, rseed):
+                with self._tp_ctx():
+                    pages, logits = self.model.prefill_chunk(
+                        params, {"k": k_pages, "v": v_pages}, row, tokens,
+                        start, valid,
+                    )
+                    tok = sample_tokens(
+                        logits[None], temp[None], tk[None], tp[None],
+                        rseed[None], jnp.zeros((1,), jnp.int32),
+                        self.cfg.vocab_size,
+                    )
+                return pages["k"], pages["v"], tok[0]
+
+            smapped = self._smap(
+                fn,
+                in_specs=(self.param_specs, PAGE_SPEC, PAGE_SPEC)
+                + (P(),) * 8,
+                out_specs=(PAGE_SPEC, PAGE_SPEC, P()),
+            )
+            self._chunk_fn = jax.jit(smapped, donate_argnums=(1, 2))
+        return self._chunk_fn
+
+    def prefill_chunk(self, work: PrefillChunk) -> int:
+        """Dispatch one chunk; returns the sampled first token (meaningful
+        only when this was the prompt's final chunk)."""
+        sp = work.seq.request.sampling
+        k_pages, v_pages, tok = self._chunk_prefill_fn()(
+            self.params, self.cache.k_pages, self.cache.v_pages,
+            jnp.asarray(work.tokens), self.cache.device_row(work.slot),
+            jnp.asarray(work.start, jnp.int32),
+            jnp.asarray(work.valid, jnp.int32),
+            jnp.asarray(sp.temperature, jnp.float32),
+            jnp.asarray(sp.top_k, jnp.int32),
+            jnp.asarray(sp.top_p, jnp.float32),
+            jnp.asarray(work.seq.handle.seed, jnp.int32),
+        )
+        self.cache.set_pages(k_pages, v_pages)
+        return int(tok)
+
+    # ------------------------------------------------------------------
+    # legacy whole-prompt prefill (prefill_chunk=None / vlm)
+    # ------------------------------------------------------------------
+    def _bucket(self, plen: int) -> int:
+        b = 16
+        while b < plen:
+            b *= 2
+        return min(b, max(self.max_len - self.nf, 1))
+
+    def _prefill_fn(self, bucket: int):
+        """Whole-prompt path: ONE dispatch per admission — sharded prefill
+        forward + page scatter + first-token sample, jitted per
+        prompt-length bucket."""
+        if bucket not in self._prefill_fns:
+            s_total = self.nf + bucket
+
+            def fn(params, batch, idx, k_pages, v_pages, row, valid_len,
+                   temp, tk, tp, rseed):
+                with self._tp_ctx():
+                    cache, logits = self.model.prefill(
+                        params, batch, s_total, logits_index=idx
+                    )
+                    # cache["k"] is (L, 1, S, KVH/tp, Dh): the local head
+                    # slice scatters into the local page shard — positions
+                    # and page ids are shard-invariant
+                    k_pages, v_pages = write_prefill_pages(
+                        k_pages, v_pages, cache["k"][:, 0], cache["v"][:, 0],
+                        row, valid_len,
+                    )
+                    tok = sample_tokens(
+                        logits, temp[None], tk[None], tp[None], rseed[None],
+                        jnp.zeros((1,), jnp.int32), self.cfg.vocab_size,
+                    )
+                return k_pages, v_pages, tok[0]
+
+            smapped = self._smap(
+                fn,
+                in_specs=(self.param_specs, P(), P(), PAGE_SPEC, PAGE_SPEC)
+                + (P(),) * 6,
+                out_specs=(PAGE_SPEC, PAGE_SPEC, P()),
+            )
+            self._prefill_fns[bucket] = jax.jit(
+                smapped, donate_argnums=(3, 4)
+            )
+        return self._prefill_fns[bucket]
+
+    def prefill_whole(self, request, seed: int, slot: int) -> int:
+        """Prefill a whole prompt into its pages; returns the first token."""
+        plen = len(request.prompt)
+        ctx = self.nf + plen
+        bucket = self._bucket(plen)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :plen] = request.prompt
+        batch = {"tokens": jnp.asarray(toks)}
+        if self.cfg.family == "vlm":
+            batch["vision_embeds"] = jnp.zeros(
+                (1, self.nf, self.cfg.d_model), jnp.dtype(self.cfg.dtype)
+            )
+        sp = request.sampling
+        k_pages, v_pages, tok = self._prefill_fn(bucket)(
+            self.params, batch, jnp.asarray(ctx - 1, jnp.int32),
+            self.cache.k_pages, self.cache.v_pages,
+            self.cache.device_row(slot),
+            jnp.asarray(ctx, jnp.int32),
+            jnp.asarray(sp.temperature, jnp.float32),
+            jnp.asarray(sp.top_k, jnp.int32),
+            jnp.asarray(sp.top_p, jnp.float32),
+            jnp.asarray(seed, jnp.int32),
+        )
+        self.cache.set_pages(k_pages, v_pages)
+        return int(tok)

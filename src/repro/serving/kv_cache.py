@@ -7,6 +7,15 @@ sequences are in flight or how long each one is. The host side is a
 refcounted free-list allocator (:class:`PagePool`) and per-slot bookkeeping
 (:class:`PagedKVCache`) that hands the engine ready-to-transfer block tables.
 
+Sharded serving (the scheduler/executor split) places the pool on a
+``("model",)`` mesh sharded along the **kv-head** dim only
+(:meth:`PagedKVCache._reshard`): every shard then holds the same physical
+pages for its slice of heads, so page ids, block tables, refcounts and the
+prefix index below are shard-invariant and stay SINGLE host-side
+structures — nothing in this module knows how many devices exist. The
+copy-on-write page copy (:func:`_copy_page`) slices along the page dim,
+which keeps the head sharding intact.
+
 Page 0 is reserved as the **null page**: unused block-table entries and idle
 decode slots point at it, so the kernel's gathers never go out of bounds and
 idle-slot writes land in a sink nobody reads (reads are masked by length).
@@ -340,6 +349,16 @@ class PagedKVCache:
 
     def set_pages(self, k_pages: jax.Array, v_pages: jax.Array) -> None:
         self.k_pages, self.v_pages = k_pages, v_pages
+
+    def _reshard(self, sharding) -> None:
+        """Re-place the page pool with an explicit sharding (the serving
+        executor shards the kv-head dim over its ``("model",)`` mesh).
+        Host-side bookkeeping is untouched: only the head dim may be
+        sharded, so page ids stay shard-invariant."""
+        self.set_pages(
+            jax.device_put(self.k_pages, sharding),
+            jax.device_put(self.v_pages, sharding),
+        )
 
     def gather_dense(self, slot: int) -> tuple[np.ndarray, np.ndarray]:
         """Reassemble a slot's K/V as dense (L, len, KVH, Dh) — tests only."""

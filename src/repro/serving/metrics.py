@@ -1,14 +1,79 @@
-"""Latency summaries over engine Results (single source for the
-percentile/format logic used by ``launch/serve.py`` and ``benchmarks/run.py``).
+"""Serving metrics: request latency summaries + per-step engine gauges.
 
-``ttft``/``itl`` are stamped per-request by the ``RequestHandle`` lifecycle
-machinery (``serving/api.py``), so every protocol engine — paged and
-lockstep alike — reports them; Results lacking latency data are skipped.
+Two kinds of measurement live here (single source for the
+percentile/format logic used by ``launch/serve.py`` and
+``benchmarks/run.py``):
+
+* **Request-level latency** — ``ttft``/``itl`` are stamped per-request by
+  the ``RequestHandle`` lifecycle machinery (``serving/api.py``), so every
+  protocol engine — paged and lockstep alike — reports them; Results
+  lacking latency data are skipped.
+* **Per-step engine gauges** (:class:`UtilizationMetrics`) — decode-slot
+  occupancy and page-pool utilization, recorded once per decode step by
+  both engines. These answer the capacity questions request counters
+  can't: is the decode batch actually full (occupancy), and is throughput
+  page-bound or slot-bound (page utilization vs occupancy)?
+  ``launch/serve.py`` prints both in its stats output.
 """
 
 from __future__ import annotations
 
 import numpy as np
+
+
+class UtilizationMetrics:
+    """Per-decode-step occupancy/utilization gauges for one engine.
+
+    ``record`` is called by the engine once per decode step with the
+    number of actively decoding slots and (paged engine only) the page
+    pool's in-use count. ``summary()`` aggregates to mean/peak fractions;
+    ``merge`` combines trackers from multiple workers.
+    """
+
+    def __init__(self):
+        self.slot_samples: list[float] = []   # decoding / total slots
+        self.page_samples: list[float] = []   # pages in use / usable pages
+
+    def record(self, *, active: int, slots: int,
+               pages_used: int | None = None,
+               pages_total: int | None = None) -> None:
+        self.slot_samples.append(active / max(slots, 1))
+        if pages_total:
+            self.page_samples.append(pages_used / pages_total)
+
+    def merge(self, other: "UtilizationMetrics") -> None:
+        self.slot_samples.extend(other.slot_samples)
+        self.page_samples.extend(other.page_samples)
+
+    @property
+    def steps(self) -> int:
+        return len(self.slot_samples)
+
+    def summary(self) -> dict | None:
+        """Mean/peak slot occupancy and page utilization (fractions), or
+        None when no decode step was recorded."""
+        if not self.slot_samples:
+            return None
+        out = {
+            "decode_steps": len(self.slot_samples),
+            "slot_occupancy_mean": float(np.mean(self.slot_samples)),
+            "slot_occupancy_peak": float(np.max(self.slot_samples)),
+        }
+        if self.page_samples:
+            out["page_util_mean"] = float(np.mean(self.page_samples))
+            out["page_util_peak"] = float(np.max(self.page_samples))
+        return out
+
+    def format(self) -> str:
+        s = self.summary()
+        if s is None:
+            return "no_utilization_data"
+        txt = (f"slot_occupancy_mean={s['slot_occupancy_mean']:.0%}/"
+               f"peak={s['slot_occupancy_peak']:.0%}")
+        if "page_util_mean" in s:
+            txt += (f";page_util_mean={s['page_util_mean']:.0%}/"
+                    f"peak={s['page_util_peak']:.0%}")
+        return f"{txt};decode_steps={s['decode_steps']}"
 
 
 def latency_percentiles(results) -> dict | None:

@@ -1,0 +1,312 @@
+"""Host-side scheduling policy for the paged serving engine.
+
+This module is the POLICY half of the scheduler/executor split
+(``docs/serving.md``): everything the continuous-batching engine decides on
+the host — slot placement, chunked-prefill interleaving, prefix-sharing
+deferral, preemption victim selection, page accounting and decode-batch
+assembly — lives here as plain Python + numpy, with no jax import and no
+device dispatch. The device half (:class:`repro.serving.executor.
+ModelExecutor`) consumes the work items this module produces
+(:class:`PrefillChunk`, :class:`DecodeInputs`) and never makes decisions.
+
+The split is what makes sharded serving tractable: ONE scheduler instance
+drives the whole mesh. Because the executor shards the KV page pool along
+the head dimension, block tables and page ids are identical on every shard,
+so the prefix/refcount index stays a single host-side structure — no
+replication, no cross-shard reconciliation (the ROADMAP's
+replicate-vs-shard question resolves to "neither: shard only the tensor
+dim the host never indexes by").
+
+It is also what makes the policy unit-testable: every method here can be
+driven against a :class:`~repro.serving.kv_cache.PagedKVCache` without
+compiling or dispatching a single model step (see
+``tests/test_serving_sharded.py``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.serving.kv_cache import NULL_PAGE, PagedKVCache
+
+__all__ = [
+    "DecodeInputs",
+    "PrefillChunk",
+    "Scheduler",
+    "Sequence",
+]
+
+
+@dataclass
+class Sequence:
+    """One in-flight sequence (a slot's host-side state)."""
+
+    request: object         # serving.api.Request
+    handle: object          # serving.api.RequestHandle
+    tokens: list[int]       # this ATTEMPT's tokens (feed decode; the handle
+                            # owns the emitted stream, which survives
+                            # preemption)
+    order: int = 0          # admission sequence number (preemption picks
+                            # youngest)
+    phase: str = "decode"   # "prefill" until the whole prompt is cached
+    prefill_pos: int = 0    # prompt positions already resident in pages
+
+
+@dataclass
+class PrefillChunk:
+    """One chunk of prefill work for the executor: ``tokens`` is the padded
+    fixed-size chunk, positions ``[start, start+valid)`` are real."""
+
+    slot: int
+    seq: Sequence
+    tokens: np.ndarray
+    start: int
+    valid: int
+
+
+@dataclass
+class DecodeInputs:
+    """One decode step's host-assembled batch (numpy; the executor mirrors
+    it to the device only when the composition changed)."""
+
+    tokens: np.ndarray        # (S, 1) int32 last token per slot
+    temps: np.ndarray         # (S,) f32
+    top_ks: np.ndarray        # (S,) int32
+    top_ps: np.ndarray        # (S,) f32
+    seeds: np.ndarray         # (S,) int32
+    idx: np.ndarray           # (S,) int32 per-request token index
+    active: np.ndarray        # (S,) int32 1 for decoding slots
+    block_tables: np.ndarray  # (S, MP) int32; masked slots -> null page
+    lengths: np.ndarray       # (S,) int32; masked slots -> 0
+    greedy_only: bool = True
+
+
+class Scheduler:
+    """Pure-host scheduler over a :class:`PagedKVCache`'s bookkeeping.
+
+    Owns the slot map and every serving *decision*; owns NO jitted function
+    and no device array. The engine translates its outputs into lifecycle
+    events and executor calls.
+    """
+
+    def __init__(
+        self,
+        cache: PagedKVCache,
+        *,
+        prefill_chunk: int | None,
+        chunked: bool,
+        prefix_sharing: bool,
+        extra_ctx: int = 0,
+    ):
+        self.cache = cache
+        self.prefill_chunk = prefill_chunk
+        self.chunked = chunked
+        self.prefix_sharing = prefix_sharing and chunked
+        self.extra_ctx = extra_ctx  # non-token context (vlm frontend tokens)
+        self.slots: dict[int, Sequence] = {}
+        self.dirty = True  # decode-batch composition changed since last build
+        self._admit_counter = 0
+
+    # ------------------------------------------------------------------
+    # admission
+    # ------------------------------------------------------------------
+    def _pending_prefix_gain(self, tokens: list[int]) -> int:
+        """Longest full-page prefix of ``tokens`` that an IN-FLIGHT prefill
+        will publish to the prefix index but has not yet (its chunks haven't
+        reached those pages). Admission waits for such a prefix instead of
+        allocating private pages for content that is about to be shared —
+        without this, a burst of same-prefix requests admitted in one step
+        would get zero sharing."""
+        ps = self.cache.page_size
+        limit = self.cache._prefix_limit(tokens)
+        best = 0
+        for seq in self.slots.values():
+            if seq.phase != "prefill":
+                continue
+            other = seq.request.prompt
+            n = 0
+            for i in range(min(limit, len(other) // ps)):
+                if tokens[i * ps:(i + 1) * ps] != other[i * ps:(i + 1) * ps]:
+                    break
+                n += 1
+            best = max(best, n * ps)
+        return best
+
+    def can_place(self, request) -> bool:
+        """Whether the queue head should be admitted NOW — false when the
+        cache lacks slots/pages for it, or when deferring would let it share
+        a prefix an in-flight prefill is about to publish."""
+        tokens = request.prompt if self.prefix_sharing else None
+        if tokens is not None:
+            matched = self.cache.match_prefix(tokens)[1]
+            if self._pending_prefix_gain(tokens) > matched:
+                return False  # a longer shared prefix lands within a few chunks
+        return self.cache.can_admit(self.extra_ctx + len(request.prompt), tokens)
+
+    def place(self, request, handle) -> tuple[int, Sequence, int]:
+        """Claim a slot and pages for ``request``. Returns
+        ``(slot, sequence, cached_len)``; chunked sequences start in the
+        ``prefill`` phase at ``prefill_pos=cached_len`` (shared prefix pages
+        already mapped), legacy whole-prompt sequences start decode-ready
+        (the engine runs their prefill immediately)."""
+        tokens = request.prompt if self.prefix_sharing else None
+        slot, cached = self.cache.admit(
+            self.extra_ctx + len(request.prompt), tokens
+        )
+        self._admit_counter += 1
+        seq = Sequence(
+            request, handle, [], order=self._admit_counter,
+            phase="prefill" if self.chunked else "decode",
+            prefill_pos=cached,
+        )
+        self.slots[slot] = seq
+        self.dirty = True
+        return slot, seq, cached
+
+    # ------------------------------------------------------------------
+    # chunked prefill
+    # ------------------------------------------------------------------
+    def next_prefill(self) -> PrefillChunk | None:
+        """The OLDEST in-flight prefill's next fixed-size chunk (the engine
+        runs at most one per step so concurrent decodes stall for one
+        chunk's latency at worst), or None when nothing is prefilling."""
+        cands = [(q.order, s) for s, q in self.slots.items()
+                 if q.phase == "prefill"]
+        if not cands:
+            return None
+        _, slot = min(cands)
+        seq = self.slots[slot]
+        prompt = seq.request.prompt
+        start = seq.prefill_pos
+        c = self.prefill_chunk
+        valid = min(c, len(prompt) - start)
+        toks = np.zeros((c,), np.int32)
+        toks[:valid] = prompt[start:start + valid]
+        return PrefillChunk(slot, seq, toks, start, valid)
+
+    def complete_chunk(self, work: PrefillChunk) -> bool:
+        """Record a dispatched chunk: advance the prefill cursor, publish
+        the covered full pages to the prefix index (dispatch order is
+        execution order, so a later admission can share them safely).
+        Returns True when the prompt is now fully cached."""
+        seq = work.seq
+        prompt = seq.request.prompt
+        seq.prefill_pos = work.start + work.valid
+        if self.prefix_sharing:
+            self.cache.register_prefix(work.slot, prompt, seq.prefill_pos)
+        return seq.prefill_pos == len(prompt)
+
+    def begin_decode(self, slot: int) -> None:
+        """Prompt fully cached: the slot joins the decode batch."""
+        self.slots[slot].phase = "decode"
+        self.dirty = True
+
+    # ------------------------------------------------------------------
+    # lifecycle
+    # ------------------------------------------------------------------
+    def find(self, uid: str) -> int | None:
+        for slot, seq in self.slots.items():
+            if seq.request.uid == uid:
+                return slot
+        return None
+
+    def release(self, slot: int) -> Sequence:
+        """Free a finished/cancelled sequence's slot and pages."""
+        seq = self.slots.pop(slot)
+        self.cache.release(slot)
+        self.dirty = True
+        return seq
+
+    def has_decodable(self) -> bool:
+        return any(q.phase == "decode" for q in self.slots.values())
+
+    def decoding(self) -> list[tuple[int, Sequence]]:
+        """(slot, seq) pairs currently in the decode phase, slot order."""
+        return sorted(
+            (s, q) for s, q in self.slots.items() if q.phase == "decode"
+        )
+
+    def evict_youngest(self) -> tuple[int, Sequence]:
+        """Release the youngest sequence (any phase) and hand it back for
+        the engine to requeue or finish ``preempted``."""
+        slot = max(self.slots, key=lambda s: self.slots[s].order)
+        return slot, self.release(slot)
+
+    def ensure_decode_capacity(self) -> list[Sequence]:
+        """Give every DECODING slot a writable page for its next position —
+        growing at page boundaries, copying a shared (refcount > 1) page
+        anywhere else — evicting the youngest sequences if the pool runs
+        dry. A lone sequence can always grow (submit rejects requests that
+        exceed the whole pool), so this terminates with at least one slot
+        making progress. Returns the evicted sequences (pages already
+        released) for the engine's preemption bookkeeping."""
+        preempted: list[Sequence] = []
+        order = sorted(
+            (s for s, q in self.slots.items() if q.phase == "decode"),
+            key=lambda s: self.slots[s].order,
+        )
+        for slot in order:
+            while slot in self.slots:
+                try:
+                    if self.cache.ensure_append_capacity(slot):
+                        self.dirty = True
+                    break
+                except RuntimeError:
+                    preempted.append(self.evict_youngest()[1])
+        return preempted
+
+    # ------------------------------------------------------------------
+    # decode-batch assembly
+    # ------------------------------------------------------------------
+    def build_decode_inputs(self) -> DecodeInputs:
+        """Assemble the fixed-width decode batch from host state. Slots that
+        are idle or still prefilling are masked to the null page / length 0
+        so the decode write lands in the sink and their (discarded)
+        attention output reads nothing. Fresh copies throughout — the cache
+        tables mutate between steps and the executor transfers these
+        asynchronously."""
+        n = self.cache.max_slots
+        tokens = np.zeros((n, 1), np.int32)
+        temps = np.zeros((n,), np.float32)
+        top_ks = np.zeros((n,), np.int32)
+        top_ps = np.ones((n,), np.float32)
+        seeds = np.zeros((n,), np.int32)
+        idx = np.zeros((n,), np.int32)
+        active = np.zeros((n,), np.int32)
+        bt = self.cache.block_tables.copy()
+        lens = self.cache.lengths.copy()
+        live = np.zeros((n,), bool)
+        greedy = True
+        for slot, seq in self.slots.items():
+            if seq.phase != "decode":
+                continue
+            live[slot] = True
+            tokens[slot, 0] = seq.tokens[-1]
+            sp = seq.request.sampling
+            temps[slot] = sp.temperature
+            top_ks[slot] = sp.top_k
+            top_ps[slot] = sp.top_p
+            seeds[slot] = seq.handle.seed
+            idx[slot] = len(seq.tokens)
+            active[slot] = 1
+            greedy = greedy and sp.temperature <= 0.0
+        bt[~live] = NULL_PAGE
+        lens[~live] = 0
+        self.dirty = False
+        return DecodeInputs(tokens, temps, top_ks, top_ps, seeds, idx,
+                            active, bt, lens, greedy_only=greedy)
+
+    # ------------------------------------------------------------------
+    # gauges
+    # ------------------------------------------------------------------
+    def occupancy(self) -> tuple[int, int]:
+        """(decoding slots, total slots) for the utilization gauges."""
+        return (sum(1 for q in self.slots.values() if q.phase == "decode"),
+                self.cache.max_slots)
+
+    def page_utilization(self) -> tuple[int, int]:
+        """(pages in use, usable pages) — excludes the reserved null page."""
+        usable = self.cache.num_pages - 1
+        return usable - self.cache.pool.available, usable

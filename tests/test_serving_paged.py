@@ -439,6 +439,89 @@ def test_fork_cow_copies_exactly_one_page():
     assert (cache.pool.refcounts[1:] == 0).all()
 
 
+def test_cow_append_fails_cleanly_when_pool_exhausted():
+    """Pool exhaustion DURING a copy-on-write append: every free page is
+    held by refcounted (unfreeable) sharers, so the COW copy has nowhere to
+    land. ensure_append_capacity must raise (so the engine can preempt)
+    WITHOUT corrupting state: no page leaked, the shared mapping and block
+    table untouched, refcounts intact — and the append must succeed after
+    pressure drops."""
+    cache = _small_cache(num_pages=4)  # pages 1..3 usable
+    toks = list(range(1, 13))  # 12 tokens: 1 full page + 1 partial
+    a, _ = cache.admit(len(toks), toks)   # takes pages 1, 2
+    b = cache.fork(a)                     # maps both COW (refcounts 2)
+    (filler,) = cache.pool.alloc(1)       # page 3: pool now empty
+    assert cache.pool.available == 0
+
+    before_pages = list(cache._slot_pages[b])
+    before_bt = cache.block_tables[b].copy()
+    before_rc = cache.pool.refcounts.copy()
+    # b's next write lands at position 12 inside shared page 2 -> COW needs
+    # a fresh page, but every page is refcounted and unfreeable
+    with pytest.raises(RuntimeError, match="exhausted"):
+        cache.ensure_append_capacity(b)
+    assert cache.stats["cow_copies"] == 0
+    assert cache._slot_pages[b] == before_pages      # mapping unchanged
+    np.testing.assert_array_equal(cache.block_tables[b], before_bt)
+    np.testing.assert_array_equal(cache.pool.refcounts, before_rc)
+    assert cache.pool.available == 0                 # nothing leaked
+
+    # releasing unrelated pressure makes the SAME append succeed as a copy
+    cache.pool.free([filler])
+    assert cache.ensure_append_capacity(b) is True
+    assert cache.stats["cow_copies"] == 1
+    assert cache._slot_pages[b][1] != cache._slot_pages[a][1]
+    cache.release(a)
+    cache.release(b)
+    assert cache.pool.available == cache.num_pages - 1
+
+
+def test_cow_exhaustion_growth_page_also_raises():
+    """The page-boundary growth branch hits the same exhaustion path: a
+    slot at a page boundary with an empty pool raises instead of stealing a
+    refcounted page, and the pool stays balanced."""
+    cache = _small_cache(num_pages=3, page_size=8)  # pages 1..2 usable
+    toks = list(range(1, 9))  # exactly one full page
+    a, _ = cache.admit(len(toks), toks)
+    b = cache.fork(a)          # page shared at refcount 2
+    (filler,) = cache.pool.alloc(1)
+    with pytest.raises(RuntimeError, match="exhausted"):
+        cache.ensure_append_capacity(a)  # boundary: needs a NEW page
+    assert cache.pool.refcounts[cache._slot_pages[a][0]] == 2
+    cache.pool.free([filler])
+    assert cache.ensure_append_capacity(a) is True   # growth succeeds now
+    cache.release(a)
+    cache.release(b)
+    assert cache.pool.available == cache.num_pages - 1
+    assert (cache.pool.refcounts[1:] == 0).all()
+
+
+def test_engine_preempts_when_cow_append_cannot_allocate(smollm):
+    """Engine-level: shared prefix pages make the pool LOOK full of
+    unfreeable pages; when a decode append needs a page the scheduler must
+    preempt the youngest sequence (whose release drops the shared
+    refcounts) instead of crashing, and every request still finishes
+    exactly."""
+    cfg, model, params = smollm
+    # 7 usable pages; two 17-token same-prefix prompts share 2 full pages:
+    # 2 shared + 2 private tails + growth quickly exceeds the pool
+    eng = ContinuousBatchingEngine(cfg, params, max_len=48, max_slots=3,
+                                   page_size=8, num_pages=8,
+                                   prefill_chunk=8)
+    prefix = list(range(40, 56))  # 2 full pages
+    reqs = [Request(f"c{i}", prefix + [60 + i], max_new_tokens=14)
+            for i in range(3)]
+    out = eng.generate(reqs)
+    assert eng.cache.stats["prefix_hits"] >= 1  # sharing actually happened
+    assert eng.stats["preemptions"] > 0         # pressure forced eviction
+    base = GenerationEngine(cfg, params, max_len=48)
+    for r, o in zip(reqs, out):
+        exact = base.generate([Request(r.uid, r.prompt, r.max_new_tokens)])[0]
+        assert o.tokens == exact.tokens, r.uid
+    assert eng.cache.pool.available == eng.cache.num_pages - 1
+    assert (eng.cache.pool.refcounts[1:] == 0).all()
+
+
 def test_prefill_chunk_matches_whole_prefill(smollm):
     """Chunked prefill (2 chunks) reproduces the whole-prompt prefill's
     KV pages and final-position logits."""
