@@ -2,11 +2,17 @@
 
 Ops: ``flash_attention`` (train/prefill), ``paged_attention`` (single-token
 decode over the serving page pool), ``paged_prefill_attention`` (chunked
-prefill over the page pool; XLA-only so far), ``ssd_scan`` / ``ssd_decode_step``
-(Mamba2).
+prefill over the page pool), ``ssd_scan`` / ``ssd_decode_step`` (Mamba2).
 
 ``impl`` selection:
-  * "pallas"      — the Pallas TPU kernel (pass ``interpret=True`` on CPU).
+  * "pallas"      — the Pallas TPU kernel. On a non-TPU backend every op
+                    falls back to the ``ref.py`` path with a one-time
+                    warning (a compiled Pallas lowering needs TPU
+                    hardware), so a TPU-tuned launch config still serves
+                    correctly on CPU hosts.
+  * "pallas_interpret" — the Pallas kernel in interpret mode on any backend
+                    (tests, the differential kernel-fuzz harness, and the
+                    kernel-path engine parity suite use this on CPU).
   * "xla_chunked" — pure-jnp chunked implementations from ``ref.py``
                     (bounded memory; the default lowering path everywhere in
                     this repo since the container has no TPU).
@@ -14,12 +20,14 @@ prefill over the page pool; XLA-only so far), ``ssd_scan`` / ``ssd_decode_step``
   * "auto"        — "pallas" on TPU backends, else "xla_chunked".
 
 Contract: for every op the ``ref.py`` implementation is the ground truth;
-kernels must match it within the tolerance asserted in ``tests/`` (paged
-decode: 1e-3 max abs error in interpret mode, observed ~1e-7).
+kernels must match it within the tolerance asserted in ``tests/``
+(``tests/test_kernel_fuzz.py`` sweeps every kernel against its oracle in
+interpret mode: 1e-3 max abs error bound, observed ~1e-6).
 """
 
 from __future__ import annotations
 
+import warnings
 from functools import partial
 
 import jax
@@ -27,12 +35,48 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_bhsd
-from repro.kernels.paged_attention import paged_attention_bkgd
+from repro.kernels.paged_attention import (
+    paged_attention_bkgd,
+    paged_prefill_attention_ckgd,
+)
 from repro.kernels.ssd_scan import ssd_scan_bhsp
 
 
 def _auto_impl() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "xla_chunked"
+
+
+# ops that already warned about a compiled-Pallas -> ref fallback (warn once
+# per op per process, not once per step)
+_PALLAS_FALLBACK_WARNED: set[str] = set()
+
+
+def _resolve_pallas_impl(impl: str, interpret: bool, op: str) -> tuple[str, bool]:
+    """Normalize ``impl``/``interpret`` for every Pallas-backed op.
+
+    "pallas_interpret" forces the kernel through the interpreter (works on
+    any backend); plain "pallas" on a non-TPU backend falls back to the
+    ``ref.py`` path with a one-time warning — numerically it IS the oracle,
+    so behavior is identical, just unfused. The policy is uniform across
+    ops so a TPU-tuned launch config (``serve.py --attn-impl pallas``)
+    serves correctly on CPU hosts on ALL paths, including the legacy
+    whole-prompt prefill that lowers through ``flash_attention``.
+    """
+    if impl == "pallas_interpret":
+        return "pallas", True
+    if impl == "pallas" and not interpret and jax.default_backend() != "tpu":
+        if op not in _PALLAS_FALLBACK_WARNED:
+            _PALLAS_FALLBACK_WARNED.add(op)
+            warnings.warn(
+                f"{op}: impl='pallas' needs a TPU backend (have "
+                f"{jax.default_backend()!r}); falling back to the XLA "
+                f"reference path (one-time warning; use "
+                f"impl='pallas_interpret' to run the kernel interpreted)",
+                RuntimeWarning,
+                stacklevel=3,
+            )
+        return "xla_chunked", False
+    return impl, interpret
 
 
 # ---------------------------------------------------------------------------
@@ -55,6 +99,7 @@ def flash_attention(
     """Multi-head / grouped-query attention. Returns (B, Sq, H, D)."""
     if impl == "auto":
         impl = _auto_impl()
+    impl, interpret = _resolve_pallas_impl(impl, interpret, "flash_attention")
     if impl == "naive":
         return ref.flash_attention_ref(q, k, v, causal=causal, scale=scale)
     if impl == "xla_chunked":
@@ -102,6 +147,7 @@ def paged_attention(
     """
     if impl == "auto":
         impl = _auto_impl()
+    impl, interpret = _resolve_pallas_impl(impl, interpret, "paged_attention")
     b, h, d = q.shape
     kvh = k_pages.shape[2]
     assert kvh and h % kvh == 0, (
@@ -132,20 +178,43 @@ def paged_prefill_attention(
     *,
     scale: float | None = None,
     impl: str = "auto",
+    interpret: bool = False,
 ) -> jax.Array:
     """Chunked-prefill attention over a paged KV cache. Returns (C, H, D).
 
-    The chunk's own K/V must already be scattered into the pages. There is
-    no Pallas chunk-prefill kernel yet (ROADMAP open item), so every impl —
-    including "pallas"/"auto" on TPU — lowers to the XLA reference; the
-    signature mirrors :func:`paged_attention` so the kernel can slot in
-    without touching callers.
+    The chunk's own K/V must already be scattered into the pages; query i
+    (absolute position ``start + i``) attends causally to every cached
+    position ``<= start + i`` through the block table, and padded queries
+    (``i >= valid``) return zeros. The Pallas kernel
+    (:func:`repro.kernels.paged_attention.paged_prefill_attention_ckgd`)
+    mirrors the decode kernel's shard-local contract — under the serving
+    executor's ``shard_map`` it receives the per-shard head slice with the
+    block table replicated — and ``ref.paged_prefill_attention_ref`` stays
+    the oracle and the CPU path.
     """
-    if impl not in ("auto", "naive", "xla_chunked", "pallas"):
-        raise ValueError(f"unknown paged prefill impl {impl!r}")
-    return ref.paged_prefill_attention_ref(
-        q, k_pages, v_pages, block_table, start, valid, scale=scale
+    if impl == "auto":
+        impl = _auto_impl()
+    impl, interpret = _resolve_pallas_impl(
+        impl, interpret, "paged_prefill_attention"
     )
+    c, h, d = q.shape
+    kvh = k_pages.shape[2]
+    assert kvh and h % kvh == 0, (
+        f"q heads ({h}) must be a multiple of kv heads ({kvh}) — a sharded "
+        f"caller must slice both by the same tensor-parallel degree"
+    )
+    if impl in ("naive", "xla_chunked"):
+        return ref.paged_prefill_attention_ref(
+            q, k_pages, v_pages, block_table, start, valid, scale=scale
+        )
+    if impl == "pallas":
+        qg = q.reshape(c, kvh, h // kvh, d)
+        out = paged_prefill_attention_ckgd(
+            qg, k_pages, v_pages, block_table, start, valid,
+            scale=scale, interpret=interpret,
+        )
+        return out.reshape(c, h, d)
+    raise ValueError(f"unknown paged prefill impl {impl!r}")
 
 
 # ---------------------------------------------------------------------------
@@ -171,6 +240,7 @@ def ssd_scan(
     """
     if impl == "auto":
         impl = _auto_impl()
+    impl, interpret = _resolve_pallas_impl(impl, interpret, "ssd_scan")
     if impl == "naive":
         return ref.ssd_sequential(x, dt, A, Bm, Cm)
 

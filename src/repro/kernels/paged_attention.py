@@ -1,28 +1,43 @@
-"""Paged attention decode as a Pallas TPU kernel.
+"""Paged attention (decode AND chunked prefill) as Pallas TPU kernels.
 
-DECODE path only: one query token per sequence attends over K/V stored in a
-shared page pool (`kv_cache.PagedKVCache` layout): pages are gathered
-*inside the grid* via a scalar-prefetched block table, so sequences of
-wildly different lengths share one decode batch with zero re-padding and no
-dense gather in HBM. (Chunked prefill — multiple query tokens per sequence —
-runs through the XLA reference ``ref.paged_prefill_attention_ref``; a Pallas
-chunk-prefill kernel is a ROADMAP open item.) Oracle: ``ref.paged_attention_ref``
-— identical masking/normalization conventions, idle (length-0) slots return
-exact zeros, never NaN.
+Two kernels over the same page-pool layout (`kv_cache.PagedKVCache`):
 
-Grid: (batch, kv-head, logical-page) with the page dimension innermost — TPU
-grid steps are sequential, so the online-softmax state (acc, m, l) lives in
-VMEM scratch and carries across pages of the same (batch, head), reusing the
+* ``paged_attention_bkgd`` — DECODE: one query token per sequence attends
+  over K/V stored in the shared page pool; pages are gathered *inside the
+  grid* via a scalar-prefetched block table, so sequences of wildly
+  different lengths share one decode batch with zero re-padding and no
+  dense gather in HBM. Oracle: ``ref.paged_attention_ref`` — identical
+  masking/normalization conventions, idle (length-0) slots return exact
+  zeros, never NaN.
+* ``paged_prefill_attention_ckgd`` — CHUNKED PREFILL: C queries of ONE
+  sequence (absolute positions ``start+i``) attend causally over the
+  sequence's paged prefix *plus the chunk itself* (whose K/V the caller
+  already scattered into the pages). Oracle:
+  ``ref.paged_prefill_attention_ref``; padded queries (``i >= valid``)
+  return exact zeros. The C=1, start=length-1 case degenerates to decode.
+
+Decode grid: (batch, kv-head, logical-page), page innermost — TPU grid
+steps are sequential, so the online-softmax state (acc, m, l) lives in VMEM
+scratch and carries across pages of the same (batch, head), reusing the
 scratch pattern from ``flash_attention.py``. The BlockSpec index_map reads
 ``block_tables[b, p]`` (scalar prefetch) to DMA the right physical page;
 pages past a sequence's length map to the reserved null page 0 and are
 skipped via ``pl.when``. GQA is native: q arrives grouped (B, KVH, G, D) and
 each grid cell computes all G grouped heads against one kv head's page.
 
-Tensor-parallel serving dispatches this kernel PER SHARD: the serving
+Prefill-chunk grid: (kv-head, logical-page), page innermost — one sequence,
+so there is no batch dim; the whole chunk's grouped queries (flattened to
+C*G rows) stay resident in VMEM across the page walk and the same
+online-softmax scratch carries between pages. Causality is a per-row mask
+(``kpos <= start + row//G``), so a chunk straddling a page boundary, a
+partial last page, a COW-forked table or history length 0 all fall out of
+the one mask — there is no special-cased edge. Pages wholly past the
+chunk's last live query (``p*page >= start+valid``) are skipped.
+
+Tensor-parallel serving dispatches BOTH kernels PER SHARD: the serving
 executor's ``shard_map`` hands each device its contiguous kv-head slice of
 the page pool (KVH/tp heads) and the matching grouped-q slice, with block
-tables and lengths replicated. Nothing in the kernel changes — the grid's
+tables and lengths replicated. Nothing in the kernels changes — the grid's
 kv-head extent is just the local ``KVH/tp``, and because pages shard only
 along the head dim, the scalar-prefetched block-table values (physical page
 ids) are identical on every shard.
@@ -155,3 +170,141 @@ def paged_attention_bkgd(
         out_shape=jax.ShapeDtypeStruct((b, kvh, group, d), q.dtype),
         interpret=interpret,
     )(block_tables, lengths, q, k_pages, v_pages)
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill
+# ---------------------------------------------------------------------------
+
+
+def _paged_prefill_kernel(
+    bt_ref,    # (MP,) int32 scalar-prefetch: the sequence's block-table row
+    meta_ref,  # (2,)  int32 scalar-prefetch: [start, valid]
+    q_ref, k_ref, v_ref,  # VMEM blocks
+    o_ref,
+    acc_ref, m_ref, l_ref,  # VMEM scratch
+    *,
+    scale: float,
+    page_size: int,
+    num_logical_pages: int,
+    group: int,
+):
+    p = pl.program_id(1)
+    start = meta_ref[0]
+    valid = meta_ref[1]
+
+    @pl.when(p == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # pages wholly past the chunk's last live query attend nothing: skip.
+    # (valid == 0 leaves every row fully masked -> exact zeros, like the ref)
+    run = p * page_size < start + valid
+
+    @pl.when(run)
+    def _compute():
+        # q rows are the chunk flattened to (C*G, D): row r = chunk position
+        # r // G, grouped head r % G — one mask expression covers causality,
+        # chunk padding, partial pages and page-straddling chunks at once
+        q = q_ref[0].astype(jnp.float32)        # (C*G, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)  # (page, D)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                               # (C*G, page)
+        kpos = p * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, dimension=1
+        )
+        ci = jax.lax.broadcasted_iota(jnp.int32, s.shape, dimension=0) // group
+        ok = (kpos <= start + ci) & (ci < valid)
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_ref[:, 0]
+        l_prev = l_ref[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        pexp = jnp.exp(s - m_new[:, None])
+        pexp = jnp.where(ok, pexp, 0.0)  # exact zeros on masked slots
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(pexp, axis=-1)
+        pv = jax.lax.dot_general(
+            pexp, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+        m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+
+    @pl.when(p == num_logical_pages - 1)
+    def _finalize():
+        # max(l, eps): fully masked rows (padded queries) finalize to zeros
+        l = l_ref[:, 0]
+        o_ref[0] = (
+            acc_ref[...] / jnp.maximum(l, 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+
+
+def paged_prefill_attention_ckgd(
+    q: jax.Array,            # (C, KVH, G, D) grouped chunk queries, ONE seq
+    k_pages: jax.Array,      # (P, page, KVH, D)
+    v_pages: jax.Array,
+    block_table: jax.Array,  # (MP,) int32 the sequence's block-table row
+    start: jax.Array,        # scalar int32: positions already cached
+    valid: jax.Array,        # scalar int32: real (non-padded) chunk tokens
+    *,
+    scale: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Chunked-prefill paged attention; mirrors the decode kernel's contract
+    (scalar-prefetched block table, per-shard head slice under the serving
+    executor's ``shard_map``). Returns (C, KVH, G, D) in q.dtype."""
+    c, kvh, group, d = q.shape
+    _, page_size, pkvh, _ = k_pages.shape
+    assert pkvh == kvh, (pkvh, kvh)
+    mp = block_table.shape[0]
+    scale = scale if scale is not None else d ** -0.5
+    cg = c * group
+
+    # (C, KVH, G, D) -> (KVH, C*G, D): all of one kv head's grouped queries
+    # become contiguous rows of one matmul operand
+    qf = jnp.transpose(q, (1, 0, 2, 3)).reshape(kvh, cg, d)
+    meta = jnp.stack([
+        jnp.asarray(start, jnp.int32), jnp.asarray(valid, jnp.int32)
+    ])
+
+    grid = (kvh, mp)
+    kernel = functools.partial(
+        _paged_prefill_kernel,
+        scale=scale,
+        page_size=page_size,
+        num_logical_pages=mp,
+        group=group,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, cg, d), lambda h_, p_, bt, mt: (h_, 0, 0)),
+            # physical page comes from the prefetched block table
+            pl.BlockSpec(
+                (1, page_size, 1, d),
+                lambda h_, p_, bt, mt: (bt[p_], 0, h_, 0),
+            ),
+            pl.BlockSpec(
+                (1, page_size, 1, d),
+                lambda h_, p_, bt, mt: (bt[p_], 0, h_, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, cg, d), lambda h_, p_, bt, mt: (h_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((cg, d), jnp.float32),       # acc
+            pltpu.VMEM((cg, _LANES), jnp.float32),  # m (col 0 used)
+            pltpu.VMEM((cg, _LANES), jnp.float32),  # l (col 0 used)
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((kvh, cg, d), q.dtype),
+        interpret=interpret,
+    )(block_table, meta, qf, k_pages, v_pages)
+    return jnp.transpose(out.reshape(kvh, c, group, d), (1, 0, 2, 3))

@@ -13,8 +13,9 @@ models use on non-TPU backends.
   the continuous-batching engine. Idle slots (length 0) yield zeros.
 * ``paged_prefill_attention_ref`` — chunked prefill: a chunk of C queries of
   one sequence over its paged prefix + itself (causal). The C=1 case
-  degenerates to ``paged_attention_ref``; only XLA path so far (a Pallas
-  chunk-prefill kernel is a ROADMAP open item).
+  degenerates to ``paged_attention_ref``; oracle for the Pallas
+  chunk-prefill kernel (``paged_attention.paged_prefill_attention_ckgd``)
+  and the XLA/CPU serving path.
 * ``ssd_sequential``              — Mamba2 SSD as the literal per-token
   recurrence.
 * ``ssd_chunked``                 — the SSD block-decomposition (Dao & Gu

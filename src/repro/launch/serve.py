@@ -65,6 +65,14 @@ def main() -> int:
                          "sharded executor — 'auto' picks the largest "
                          "feasible degree over local devices, an integer "
                          "forces that many (1 disables sharding)")
+    ap.add_argument("--attn-impl", default="auto",
+                    choices=["auto", "pallas", "pallas_interpret",
+                             "xla_chunked", "naive"],
+                    help="paged engine: attention lowering for decode and "
+                         "chunked prefill — 'auto' uses the Pallas kernels "
+                         "on TPU and the XLA reference elsewhere; 'pallas' "
+                         "on a non-TPU backend falls back to the reference "
+                         "with a one-time warning")
     ap.add_argument("--workdir", default="experiments/serve_run")
     args = ap.parse_args()
 
@@ -148,6 +156,7 @@ def main() -> int:
                 prefill_chunk=args.prefill_chunk or None,
                 prefix_sharing=not args.no_prefix_sharing,
                 admission=admission,
+                attn_impl=args.attn_impl,
             )
         return GenerationEngine(cfg, params, max_len=max_len,
                                 max_batch=args.max_batch, admission=admission)

@@ -199,7 +199,13 @@ def prefill_chunk_attention_paged(
     (causal). RoPE uses absolute positions ``start + i``, so a chunk never
     knows (or re-pads to) the full prompt length. Padded positions
     (>= valid) write out of bounds (dropped) and return garbage outputs the
-    caller discards."""
+    caller discards.
+
+    ``attn_impl`` selects the attention lowering exactly like decode:
+    "pallas"/"auto"-on-TPU dispatches the Pallas chunk-prefill kernel
+    (shard-map compatible — each TP shard attends its own head slice of the
+    page pool against its grouped-q slice), everything else lowers through
+    ``ref.paged_prefill_attention_ref``."""
     c = x.shape[1]
     positions = start + jnp.arange(c)
     q, k, v = _project_qkv(p, x, cfg, positions, rope)

@@ -670,6 +670,12 @@ class DecoderLM:
         (the first sampling position), garbage (and ignored) before that.
         Token-embedding families only (dense/moe); vlm prompts carry vision
         embeds and keep the whole-prompt bucketed prefill path.
+
+        The chunk attention lowers per ``self.attn_impl`` exactly like the
+        paged decode step: the Pallas chunk-prefill kernel on TPU (sharded
+        serving dispatches it per kv-head shard), the XLA oracle elsewhere
+        — same contract either way, asserted by the differential fuzz sweep
+        in ``tests/test_kernel_fuzz.py``.
         """
         cfg = self.cfg
         assert cfg.family in ("dense", "moe"), cfg.family

@@ -195,10 +195,11 @@ class ModelExecutor:
     def __init__(self, cfg, params, cache, *, max_len: int,
                  mesh: Mesh | None = None, attn_impl: str | None = None):
         self.cfg = cfg
-        self.model = (
-            build_model(cfg, attn_impl=attn_impl) if attn_impl
-            else build_model(cfg)
-        )
+        # serving defaults to "auto" (not the model-default "xla_chunked"):
+        # on TPU every hot path — paged decode, chunked prefill, legacy
+        # whole-prompt flash — dispatches its Pallas kernel per shard; on
+        # CPU "auto" resolves to the identical XLA reference lowering
+        self.model = build_model(cfg, attn_impl=attn_impl or "auto")
         self.cache = cache
         self.max_len = max_len
         self.nf = cfg.num_frontend_tokens if cfg.family == "vlm" else 0
@@ -323,7 +324,12 @@ class ModelExecutor:
     def _chunk_prefill_fn(self):
         """ONE jitted function (static chunk shape) covers every prompt
         length — sharded chunk forward + page scatter + sample fused. The
-        sampled token is only meaningful on a prompt's final chunk."""
+        sampled token is only meaningful on a prompt's final chunk.
+
+        Under the mesh this runs per shard exactly like decode: the chunk
+        attention (Pallas kernel on TPU, XLA ref elsewhere — see
+        ``ops.paged_prefill_attention``) sees the local kv-head slice of
+        the page pool with the block-table row replicated."""
         if self._chunk_fn is None:
 
             def fn(params, k_pages, v_pages, tokens, row, start, valid,

@@ -1,0 +1,385 @@
+"""Differential kernel fuzzing: every Pallas kernel vs its ``kernels/ref.py``
+oracle, in interpret mode, over seeded randomized parameter sweeps.
+
+The hand-picked shapes in ``test_kernels.py`` / ``test_serving_paged.py``
+pin known-tricky cases; this harness systematically sweeps the shape space
+the serving engine actually visits — chunk sizes 1/odd/page-straddling,
+history lengths 0..multi-page, partial last pages, COW-forked block tables,
+GQA/MQA groupings — and asserts kernel-vs-oracle parity ≤ 1e-3 (the repo
+contract from ``ops.py``), reporting the exact failing parameter tuple on
+mismatch so a regression reproduces with one ``pytest -k`` invocation.
+
+Sweeps are a deterministic seeded grid (always run) plus a hypothesis
+property pass (skipped when hypothesis is not installed — see
+``conftest.py``). CI runs this file in the dedicated interpret-mode kernel
+job next to ``test_kernels.py``.
+"""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.serving.kv_cache import NULL_PAGE, cdiv
+
+TOL = 1e-3  # max abs error bound, kernel vs oracle (f32; observed ~1e-6)
+
+
+def _assert_close(got, want, params, kind):
+    err = float(jnp.abs(jnp.asarray(got, jnp.float32)
+                        - jnp.asarray(want, jnp.float32)).max())
+    assert err <= TOL, f"{kind}: err={err:.3e} > {TOL} at shape tuple {params}"
+
+
+# ---------------------------------------------------------------------------
+# chunked-prefill paged attention
+# ---------------------------------------------------------------------------
+# params: (c, start, valid, h, kvh, d, page, extra_mp)
+#   c      chunk width (static padded size)
+#   start  history positions already cached (0 = fresh prompt)
+#   valid  real tokens in the chunk (< c = padded chunk)
+#   extra_mp  trailing null-page block-table entries past the live pages
+
+_PREFILL_EDGES = [
+    (1, 0, 1, 4, 2, 16, 8, 1),    # single query, no history (first token)
+    (1, 17, 1, 4, 1, 8, 8, 0),    # C=1 deep in history: decode degenerate, MQA
+    (3, 5, 3, 4, 4, 16, 8, 2),    # odd chunk, history mid-page, MHA
+    (8, 0, 8, 4, 2, 16, 8, 0),    # chunk == page, aligned
+    (8, 3, 8, 4, 2, 16, 8, 1),    # chunk straddles a page boundary
+    (8, 29, 5, 8, 2, 16, 8, 1),   # multi-page history ending mid-page + pad
+    (16, 8, 16, 8, 4, 32, 8, 0),  # chunk spans two whole pages
+    (16, 15, 1, 4, 2, 16, 16, 1), # one live token landing last-in-page
+    (5, 0, 0, 4, 2, 16, 8, 1),    # fully padded chunk -> exact zeros
+    (32, 40, 32, 4, 2, 16, 16, 0),# big chunk over 2.5 pages of history
+]
+
+
+def _prefill_sweep():
+    cases = list(_PREFILL_EDGES)
+    rng = np.random.default_rng(0xC0FFEE)
+    for _ in range(24):
+        page = int(rng.choice([4, 8, 16]))
+        c = int(rng.integers(1, 33))
+        start = int(rng.integers(0, 4 * page))
+        valid = int(rng.integers(1, c + 1))
+        group = int(rng.choice([1, 2, 4]))
+        kvh = int(rng.choice([1, 2, 4]))
+        d = int(rng.choice([8, 16, 32]))
+        cases.append((c, start, valid, kvh * group, kvh, d, page,
+                      int(rng.integers(0, 3))))
+    return cases
+
+
+def _prefill_case(params, seed, forked=False):
+    """Pool + block table for one chunked-prefill call.
+
+    ``forked``: the table's live pages alias a twin sequence's pages (the
+    COW/fork layout — sharing is invisible to the kernel, but the aliased
+    ids exercise non-contiguous, non-monotonic physical page order).
+    """
+    c, start, valid, h, kvh, d, page, extra = params
+    rng = np.random.default_rng(seed)
+    total = start + valid
+    need = cdiv(max(total, 1), page)
+    num_pages = need * (2 if forked else 1) + 3
+    q = jnp.asarray(rng.standard_normal((c, h, d)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((num_pages, page, kvh, d)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((num_pages, page, kvh, d)), jnp.float32)
+    perm = rng.permutation(np.arange(1, num_pages))
+    bt = np.full((need + extra,), NULL_PAGE, np.int32)
+    bt[:need] = perm[:need]
+    if forked and need > 1:
+        # fork: shared prefix pages + a privately COW-copied tail page
+        bt[need - 1] = perm[need]
+    return q, kp, vp, jnp.asarray(bt), jnp.int32(start), jnp.int32(valid)
+
+
+@pytest.mark.parametrize("params", _prefill_sweep(),
+                         ids=lambda p: "c{}s{}v{}h{}k{}d{}p{}x{}".format(*p))
+def test_paged_prefill_kernel_vs_oracle(params):
+    for seed, forked in ((0, False), (1, True)):
+        q, kp, vp, bt, start, valid = _prefill_case(params, seed, forked)
+        want = ref.paged_prefill_attention_ref(q, kp, vp, bt, start, valid)
+        got = ops.paged_prefill_attention(
+            q, kp, vp, bt, start, valid, impl="pallas_interpret"
+        )
+        _assert_close(got, want, params + (("forked",) if forked else ()),
+                      "paged_prefill")
+
+
+def test_paged_prefill_ref_vs_dense():
+    """Semantic anchor: the oracle itself equals dense causal attention over
+    the gathered sequence (queries are its last ``valid`` positions)."""
+    for params in _PREFILL_EDGES:
+        c, start, valid, h, kvh, d, page, _ = params
+        if valid == 0:
+            continue
+        q, kp, vp, bt, s_, v_ = _prefill_case(params, seed=2)
+        total = start + valid
+        kd = np.stack([np.asarray(kp)[bt[j // page], j % page]
+                       for j in range(total)])
+        vd = np.stack([np.asarray(vp)[bt[j // page], j % page]
+                       for j in range(total)])
+        want = ref.flash_attention_ref(
+            q[None, :valid], jnp.asarray(kd)[None], jnp.asarray(vd)[None],
+            causal=True,
+        )[0]
+        got = ref.paged_prefill_attention_ref(q, kp, vp, bt, s_, v_)[:valid]
+        _assert_close(got, want, params, "paged_prefill_ref_vs_dense")
+
+
+def test_paged_prefill_chunk_walk_matches_dense():
+    """Walk a whole prompt through the kernel chunk by chunk — scatter each
+    chunk's K/V into the pages then attend — and require the concatenated
+    outputs to equal ONE dense causal attention over the full prompt. This
+    is the end-to-end contract ``DecoderLM.prefill_chunk`` relies on."""
+    for plen, chunk, page, h, kvh, d in [
+        (37, 8, 8, 4, 2, 16),   # partial last page AND partial last chunk
+        (24, 5, 8, 4, 4, 8),    # odd chunk size straddling pages
+        (16, 16, 4, 2, 1, 16),  # one chunk spanning 4 pages, MQA
+    ]:
+        rng = np.random.default_rng(plen)
+        kd = rng.standard_normal((plen, kvh, d)).astype(np.float32)
+        vd = rng.standard_normal((plen, kvh, d)).astype(np.float32)
+        qd = rng.standard_normal((plen, h, d)).astype(np.float32)
+        need = cdiv(plen, page)
+        num_pages = need + 2
+        kp = np.zeros((num_pages, page, kvh, d), np.float32)
+        vp = np.zeros((num_pages, page, kvh, d), np.float32)
+        bt = np.asarray(rng.permutation(np.arange(1, num_pages))[:need],
+                        np.int32)
+        outs = []
+        for start in range(0, plen, chunk):
+            valid = min(chunk, plen - start)
+            for i in range(start, start + valid):  # the model's page scatter
+                kp[bt[i // page], i % page] = kd[i]
+                vp[bt[i // page], i % page] = vd[i]
+            qc = np.zeros((chunk, h, d), np.float32)
+            qc[:valid] = qd[start:start + valid]
+            out = ops.paged_prefill_attention(
+                jnp.asarray(qc), jnp.asarray(kp), jnp.asarray(vp),
+                jnp.asarray(bt), jnp.int32(start), jnp.int32(valid),
+                impl="pallas_interpret",
+            )
+            outs.append(np.asarray(out)[:valid])
+        want = ref.flash_attention_ref(
+            jnp.asarray(qd)[None], jnp.asarray(kd)[None], jnp.asarray(vd)[None],
+            causal=True,
+        )[0]
+        _assert_close(np.concatenate(outs), want,
+                      (plen, chunk, page, h, kvh, d), "chunk_walk")
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    c=st.integers(1, 24),
+    start=st.integers(0, 40),
+    pad=st.integers(0, 8),
+    group=st.sampled_from([1, 2, 4]),
+    kvh=st.sampled_from([1, 2]),
+    page=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**16),
+)
+def test_paged_prefill_property(c, start, pad, group, kvh, page, seed):
+    valid = max(1, c - pad)
+    params = (c, start, valid, kvh * group, kvh, 8, page, 1)
+    q, kp, vp, bt, s_, v_ = _prefill_case(params, seed)
+    want = ref.paged_prefill_attention_ref(q, kp, vp, bt, s_, v_)
+    got = ops.paged_prefill_attention(q, kp, vp, bt, s_, v_,
+                                      impl="pallas_interpret")
+    _assert_close(got, want, params + (seed,), "paged_prefill_property")
+    # convexity: live rows are convex combinations of V rows
+    out = np.asarray(got)[:valid]
+    assert np.isfinite(out).all()
+    assert out.max() <= float(jnp.max(vp)) + 1e-4
+    assert out.min() >= float(jnp.min(vp)) - 1e-4
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention
+# ---------------------------------------------------------------------------
+# params: (b, h, kvh, d, page, mp, alias)
+#   alias: rows share physical pages (post-fork COW table layout)
+
+def _decode_sweep():
+    cases = [
+        (1, 4, 2, 16, 8, 1, False),    # one seq, one page
+        (3, 4, 2, 16, 8, 4, False),    # the classic mixed batch (idle row 0)
+        (4, 8, 1, 8, 16, 2, False),    # MQA
+        (4, 4, 4, 32, 4, 6, True),     # MHA, forked tables
+        (6, 4, 2, 16, 8, 3, True),
+    ]
+    rng = np.random.default_rng(0xDEC0DE)
+    for _ in range(16):
+        kvh = int(rng.choice([1, 2, 4]))
+        cases.append((
+            int(rng.integers(1, 7)), kvh * int(rng.choice([1, 2, 4])), kvh,
+            int(rng.choice([8, 16, 32])), int(rng.choice([4, 8, 16])),
+            int(rng.integers(1, 5)), bool(rng.integers(0, 2)),
+        ))
+    return cases
+
+
+def _decode_case(params, seed):
+    b, h, kvh, d, page, mp, alias = params
+    rng = np.random.default_rng(seed)
+    num_pages = b * mp + 2
+    q = jnp.asarray(rng.standard_normal((b, h, d)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((num_pages, page, kvh, d)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((num_pages, page, kvh, d)), jnp.float32)
+    # lengths: always include an idle slot (0), a partial page and a full table
+    lens = rng.integers(1, mp * page + 1, b).astype(np.int32)
+    if b > 1:
+        lens[0] = 0
+    if b > 2:
+        lens[1] = mp * page  # every page full
+    bt = np.full((b, mp), NULL_PAGE, np.int32)
+    nxt = 1
+    for i in range(b):
+        for p in range(cdiv(int(lens[i]), page)):
+            if alias and i > 1 and p < cdiv(int(lens[1]), page) - 1:
+                bt[i, p] = bt[1, p]  # shared prefix pages with row 1
+            else:
+                bt[i, p] = nxt
+                nxt += 1
+    return q, kp, vp, jnp.asarray(bt), jnp.asarray(lens)
+
+
+@pytest.mark.parametrize("params", _decode_sweep(),
+                         ids=lambda p: "b{}h{}k{}d{}p{}m{}{}".format(
+                             *p[:6], "a" if p[6] else ""))
+def test_paged_decode_kernel_vs_oracle(params):
+    for seed in (0, 1):
+        q, kp, vp, bt, lens = _decode_case(params, seed)
+        want = ops.paged_attention(q, kp, vp, bt, lens, impl="xla_chunked")
+        got = ops.paged_attention(q, kp, vp, bt, lens,
+                                  impl="pallas_interpret")
+        _assert_close(got, want, params + (seed,), "paged_decode")
+        if int(lens[0]) == 0:
+            assert (np.asarray(got)[0] == 0).all(), (
+                f"idle slot must be exact zeros at {params}")
+
+
+def test_paged_decode_equals_prefill_c1():
+    """Cross-kernel consistency: decode is the C=1 chunk case."""
+    params = (3, 4, 2, 16, 8, 3, False)
+    q, kp, vp, bt, lens = _decode_case(params, seed=5)
+    dec = ops.paged_attention(q, kp, vp, bt, lens, impl="pallas_interpret")
+    for i in range(q.shape[0]):
+        n = int(lens[i])
+        if n == 0:
+            continue
+        chunk = ops.paged_prefill_attention(
+            q[i][None], kp, vp, bt[i], jnp.int32(n - 1), jnp.int32(1),
+            impl="pallas_interpret",
+        )[0]
+        _assert_close(chunk, dec[i], params + (i,), "decode_vs_prefill_c1")
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+def _flash_sweep():
+    cases = []
+    rng = np.random.default_rng(0xF1A54)
+    for _ in range(10):
+        bq = int(rng.choice([16, 32, 64]))
+        nq = int(rng.integers(1, 4))
+        nk = nq + int(rng.integers(0, 3))  # Skv >= Sq (prefill continuation)
+        kvh = int(rng.choice([1, 2, 4]))
+        cases.append((
+            int(rng.integers(1, 3)), bq * nq, bq * nk,
+            kvh * int(rng.choice([1, 2])), kvh,
+            int(rng.choice([16, 32, 64])), bool(rng.integers(0, 2)), bq,
+        ))
+    return cases
+
+
+@pytest.mark.parametrize("params", _flash_sweep(),
+                         ids=lambda p: "b{}q{}k{}h{}g{}d{}{}blk{}".format(
+                             *p[:6], "c" if p[6] else "f", p[7]))
+def test_flash_kernel_vs_oracle(params):
+    b, sq, skv, h, kvh, d, causal, blk = params
+    rng = np.random.default_rng(sum(params))
+    q = jnp.asarray(rng.standard_normal((b, sq, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, skv, kvh, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, skv, kvh, d)), jnp.float32)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    got = ops.flash_attention(q, k, v, causal=causal, impl="pallas_interpret",
+                              block_q=blk, block_kv=blk)
+    _assert_close(got, want, params, "flash")
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+
+def _ssd_sweep():
+    cases = []
+    rng = np.random.default_rng(0x55D)
+    for _ in range(8):
+        chunk = int(rng.choice([8, 16, 32]))
+        # s NOT necessarily divisible by chunk: exercises the sequential
+        # remainder path carrying the kernel's final state
+        cases.append((
+            int(rng.integers(1, 3)), chunk * int(rng.integers(1, 4))
+            + int(rng.choice([0, 3])), int(rng.choice([1, 2, 4])),
+            int(rng.choice([8, 16])), int(rng.choice([16, 32])), chunk,
+        ))
+    return cases
+
+
+@pytest.mark.parametrize("params", _ssd_sweep(),
+                         ids=lambda p: "b{}s{}h{}p{}n{}c{}".format(*p))
+def test_ssd_kernel_vs_oracle(params):
+    b, s, h, p, n, chunk = params
+    rng = np.random.default_rng(sum(params))
+    x = rng.standard_normal((b, s, h, p)).astype(np.float32)
+    dt = (0.1 + 0.9 * rng.random((b, s, h))).astype(np.float32)
+    A = (-1.0 * rng.random((h,)) - 0.1).astype(np.float32)
+    Bm = (rng.standard_normal((b, s, n)) / np.sqrt(n)).astype(np.float32)
+    Cm = (rng.standard_normal((b, s, n)) / np.sqrt(n)).astype(np.float32)
+    y_want, st_want = ref.ssd_sequential(x, dt, A, Bm, Cm)
+    y_got, st_got = ops.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk,
+                                 impl="pallas_interpret")
+    _assert_close(y_got, y_want, params, "ssd_y")
+    _assert_close(st_got, st_want, params, "ssd_state")
+
+
+# ---------------------------------------------------------------------------
+# non-TPU fallback policy (ops.paged_* with impl="pallas")
+# ---------------------------------------------------------------------------
+
+
+def test_pallas_fallback_warns_once_and_matches_ref():
+    """On a non-TPU backend ``impl='pallas'`` must serve through the ref
+    path — numerically identical — after ONE RuntimeWarning per op."""
+    if jax.default_backend() == "tpu":
+        pytest.skip("fallback only exists off-TPU")
+    q, kp, vp, bt, start, valid = _prefill_case((4, 4, 4, 4, 2, 16, 8, 1), 0)
+    ops._PALLAS_FALLBACK_WARNED.discard("paged_prefill_attention")
+    with pytest.warns(RuntimeWarning, match="falling back"):
+        got = ops.paged_prefill_attention(q, kp, vp, bt, start, valid,
+                                          impl="pallas")
+    want = ref.paged_prefill_attention_ref(q, kp, vp, bt, start, valid)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # second call: silent
+        ops.paged_prefill_attention(q, kp, vp, bt, start, valid, impl="pallas")
+
+    qd, kpd, vpd, btd, lens = _decode_case((2, 4, 2, 16, 8, 2, False), 0)
+    ops._PALLAS_FALLBACK_WARNED.discard("paged_attention")
+    with pytest.warns(RuntimeWarning, match="falling back"):
+        got = ops.paged_attention(qd, kpd, vpd, btd, lens, impl="pallas")
+    want = ref.paged_attention_ref(qd, kpd, vpd, btd, lens)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        ops.paged_attention(qd, kpd, vpd, btd, lens, impl="pallas")

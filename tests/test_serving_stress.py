@@ -1,0 +1,266 @@
+"""Engine-invariant stress test: a randomized submit/cancel/shared-prefix
+trace driven through ``EngineCore.step()`` on BOTH engines, with the paged
+engine's page pool sized to force preemption mid-trace.
+
+After EVERY step the paged engine must satisfy the scheduler/page-pool
+invariants (refcounts equal live block-table references, the free list and
+the referenced set exactly partition the pool with no double-frees, the
+prefix index only maps full frozen pages bijectively, slot occupancy equals
+the live sequence set), and at drain every handle must have finished with a
+typed :class:`FinishReason` and every surviving stream must be byte-identical
+to an unperturbed replay of the same requests (no cancels, ample pages) —
+the determinism contract that makes preemption and sharing invisible.
+
+CI also runs this file under the forced 4-device mesh job, so the same
+trace stresses the sharded executor (head-sharded page pool, replicated
+tables) without any test changes.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import ARCHS, reduced
+from repro.models import build_model
+from repro.serving import (
+    ContinuousBatchingEngine,
+    FinishReason,
+    GenerationEngine,
+    Request,
+    SamplingParams,
+)
+from repro.serving.kv_cache import NULL_PAGE
+
+PAGE = 8
+MAX_LEN = 64
+
+
+@pytest.fixture(scope="module")
+def smollm():
+    cfg = reduced(ARCHS["smollm-360m"])
+    model = build_model(cfg)
+    return cfg, model.init(jax.random.key(0))
+
+
+# ---------------------------------------------------------------------------
+# trace construction
+# ---------------------------------------------------------------------------
+
+
+def _make_trace(seed: int, n: int = 14):
+    """Requests with explicit sampling seeds (stream identity must not depend
+    on submission order), a shared 2-page prefix on half of them, mixed
+    greedy/sampled rows, and a submit/cancel schedule keyed by step index."""
+    rng = np.random.default_rng(seed)
+    prefix = list(rng.integers(1, 250, 2 * PAGE))
+    reqs = []
+    for i in range(n):
+        shared = i % 2 == 0
+        body = list(rng.integers(1, 250, int(rng.integers(3, 15))))
+        reqs.append(Request(
+            f"s{i}",
+            (prefix if shared else []) + body,
+            sampling=SamplingParams(
+                temperature=0.7 if i % 5 == 4 else 0.0,
+                top_k=8 if i % 5 == 4 else 0,
+                max_new_tokens=int(rng.integers(3, 7)),
+                seed=1000 + i,
+            ),
+        ))
+    # submissions staggered in bursts; two cancels land mid-flight
+    actions: dict[int, list[tuple[str, str]]] = {}
+    for i, r in enumerate(reqs):
+        actions.setdefault(i // 3, []).append(("submit", r.uid))
+
+    actions.setdefault(4, []).append(("cancel", reqs[2].uid))   # likely decoding
+    actions.setdefault(2, []).append(("cancel", reqs[5].uid))   # likely queued
+    cancelled = {reqs[2].uid, reqs[5].uid}
+    return reqs, actions, cancelled
+
+
+# ---------------------------------------------------------------------------
+# invariants
+# ---------------------------------------------------------------------------
+
+
+def _check_paged_invariants(engine: ContinuousBatchingEngine) -> None:
+    cache, sched, pool = engine.cache, engine.scheduler, engine.cache.pool
+
+    # refcounts match live block-table references, slot by slot
+    refs: dict[int, int] = {}
+    for slot in range(cache.max_slots):
+        for p in cache._slot_pages[slot]:
+            assert p != NULL_PAGE
+            refs[p] = refs.get(p, 0) + 1
+    for page in range(1, cache.num_pages):
+        assert int(pool.refcounts[page]) == refs.get(page, 0), (
+            f"page {page}: refcount {int(pool.refcounts[page])} != "
+            f"{refs.get(page, 0)} live references"
+        )
+
+    # free list + referenced pages exactly partition the pool; a page on the
+    # free list twice would be a double-free, an unreachable allocated page
+    # a leak
+    free = pool._free
+    assert len(set(free)) == len(free), "double-freed page on the free list"
+    assert NULL_PAGE not in free
+    used = set(refs)
+    assert not set(free) & used, "page simultaneously free and referenced"
+    assert set(free) | used == set(range(1, cache.num_pages)), "leaked page"
+
+    # the prefix index only maps full frozen pages, bijectively
+    assert len(cache._page_key) == len(cache._prefix_index)
+    for key, page in cache._prefix_index.items():
+        parent, chunk = key
+        assert len(chunk) == cache.page_size, "partial page in prefix index"
+        assert page in used, "prefix index maps a freed page"
+        assert cache._page_key.get(page) == key
+    for slot, seq in sched.slots.items():
+        # positions provably written for this slot: the prefill cursor while
+        # prefilling (admit pre-sets ``lengths``), the live length after
+        written = (seq.prefill_pos if seq.phase == "prefill"
+                   else int(cache.lengths[slot]))
+        for i, p in enumerate(cache._slot_pages[slot]):
+            if p in cache._page_key:
+                assert (i + 1) * cache.page_size <= written, (
+                    f"slot {slot}: registered page {p} at index {i} is not "
+                    f"frozen (written={written}, phase={seq.phase})"
+                )
+
+    # slot occupancy == live sequences
+    live = set(sched.slots)
+    assert live == {s for s in range(cache.max_slots)
+                    if cache._slot_pages[s]}, "slot/page-map mismatch"
+    assert set(cache._free_slots) == set(range(cache.max_slots)) - live
+    assert len(set(cache._free_slots)) == len(cache._free_slots)
+    for s in cache._free_slots:
+        assert int(cache.lengths[s]) == 0
+        assert (cache.block_tables[s] == NULL_PAGE).all()
+
+
+def _check_lockstep_invariants(engine: GenerationEngine) -> None:
+    if engine._batch is None:
+        assert engine._bstate is None
+        return
+    assert not all(r.done for r in engine._batch), "retired batch kept alive"
+    for row in engine._batch:
+        sp = row.request.sampling
+        assert len(row.handle.tokens) <= sp.max_new_tokens
+
+
+# ---------------------------------------------------------------------------
+# the driver
+# ---------------------------------------------------------------------------
+
+
+def _drive(engine, reqs, actions, check):
+    """Run the schedule through ``step()``, checking invariants and event
+    well-formedness after every step. Returns (handles, events_by_uid)."""
+    by_uid = {r.uid: r for r in reqs}
+    handles, events = {}, {}
+    finished = set()
+    cancelled = set()  # cancels that actually landed (not already finished)
+    last_idx: dict[str, int] = {}
+    step = 0
+    while True:
+        for kind, uid in actions.get(step, []):
+            if kind == "submit":
+                handles[uid] = engine.submit(by_uid[uid])
+            elif engine.cancel(uid):
+                cancelled.add(uid)
+        for ev in engine.step():
+            assert ev.uid not in finished, f"{ev.uid}: event after finish"
+            if ev.kind == "finish":
+                assert isinstance(ev.finish_reason, FinishReason)
+                finished.add(ev.uid)
+            elif ev.kind == "token":
+                last = last_idx.get(ev.uid, -1)
+                assert ev.index > last, f"{ev.uid}: non-monotonic delta index"
+                last_idx[ev.uid] = ev.index
+                assert handles[ev.uid].tokens[ev.index] == ev.token
+            events.setdefault(ev.uid, []).append(ev)
+        check(engine)
+        step += 1
+        done_sched = all(s <= step for s in actions)
+        if done_sched and engine.idle:
+            break
+        assert step < 600, "trace failed to drain"
+    return handles, events, cancelled
+
+
+def _replay(cfg, params, engine_cls, reqs, **kw):
+    """Unperturbed oracle run: same requests, no cancels, no pressure."""
+    eng = engine_cls(cfg, params, max_len=MAX_LEN, **kw)
+    handles = [eng.submit(Request(r.uid, list(r.prompt), sampling=r.sampling))
+               for r in reqs]
+    while not eng.idle:
+        eng.step()
+    return {h.uid: h.result() for h in handles}
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_paged_engine_invariants_under_stress(smollm, seed):
+    cfg, params = smollm
+    reqs, actions, attempted = _make_trace(seed)
+    # 7 usable pages: admission gates on availability, so two admitted
+    # sequences fill the pool and decode-time page growth runs it dry —
+    # the youngest-first preemption path WILL fire mid-trace
+    engine = ContinuousBatchingEngine(
+        cfg, params, max_len=MAX_LEN, max_slots=4, page_size=PAGE,
+        num_pages=8, prefill_chunk=PAGE, prefix_sharing=True, seed=seed,
+    )
+    handles, _, cancelled = _drive(engine, reqs, actions,
+                                   _check_paged_invariants)
+    assert cancelled, "no cancel landed: schedule the cancels earlier"
+    assert engine.stats["preemptions"] > 0, (
+        "trace too gentle: preemption path never exercised")
+    assert engine.cache.stats["prefix_hits"] > 0, (
+        "trace too gentle: prefix sharing never exercised")
+
+    # drain state: pool fully reclaimed, prefix index empty, slots free
+    assert engine.cache.pool.available == engine.cache.num_pages - 1
+    assert not engine.cache._prefix_index and not engine.cache._page_key
+    assert len(engine.cache._free_slots) == engine.cache.max_slots
+
+    # every handle finished with a typed reason
+    for uid, h in handles.items():
+        assert isinstance(h.finish_reason, FinishReason), uid
+        if uid in cancelled:
+            assert h.finish_reason is FinishReason.CANCELLED
+        else:
+            assert h.finish_reason in (FinishReason.LENGTH, FinishReason.STOP)
+
+    # streams replay-identical to an unperturbed run (cancelled: prefix)
+    oracle = _replay(cfg, params, ContinuousBatchingEngine, reqs,
+                     max_slots=4, page_size=PAGE, prefill_chunk=PAGE,
+                     prefix_sharing=True, seed=seed)
+    for uid, h in handles.items():
+        want = oracle[uid].tokens
+        if uid in cancelled:
+            assert h.tokens == want[:len(h.tokens)], uid
+        else:
+            assert h.tokens == want, uid
+
+
+@pytest.mark.parametrize("seed", [0])
+def test_lockstep_engine_invariants_under_stress(smollm, seed):
+    cfg, params = smollm
+    reqs, actions, _attempted = _make_trace(seed, n=10)
+    engine = GenerationEngine(cfg, params, max_len=MAX_LEN, max_batch=4,
+                              seed=seed)
+    handles, _, cancelled = _drive(engine, reqs, actions,
+                                   _check_lockstep_invariants)
+    for uid, h in handles.items():
+        assert isinstance(h.finish_reason, FinishReason), uid
+        if uid in cancelled:
+            assert h.finish_reason is FinishReason.CANCELLED
+
+    oracle = _replay(cfg, params, GenerationEngine, reqs, max_batch=4,
+                     seed=seed)
+    for uid, h in handles.items():
+        want = oracle[uid].tokens
+        if uid in cancelled:
+            assert h.tokens == want[:len(h.tokens)], uid
+        else:
+            assert h.tokens == want, uid

@@ -121,3 +121,22 @@ def test_heartbeat_liveness_cycle(tmp_path):
     hb.beat(progress=2)
     assert mon.status("pod1") == "live"
     assert mon.progress("pod1") == 2
+
+
+def test_serving_api_surface_matches_snapshot():
+    """The public serving surface must match the reviewed snapshot
+    (``tools/serving_api.txt``) — the kernel-dispatch rework must add ZERO
+    drift, since ``attn_impl`` was already on the engine signature and the
+    ops layer is not part of ``repro.serving``. Intentional changes go
+    through ``tools/check_api.py --update`` in the same PR."""
+    import importlib.util
+
+    spec = importlib.util.spec_from_file_location(
+        "check_api", Path(__file__).parent.parent / "tools" / "check_api.py"
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    assert mod.render() == mod.SNAPSHOT.read_text(), (
+        "public serving surface drifted from tools/serving_api.txt; "
+        "run tools/check_api.py --update and review the diff"
+    )
