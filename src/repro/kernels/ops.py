@@ -2,7 +2,9 @@
 
 Ops: ``flash_attention`` (train/prefill), ``paged_attention`` (single-token
 decode over the serving page pool), ``paged_prefill_attention`` (chunked
-prefill over the page pool), ``ssd_scan`` / ``ssd_decode_step`` (Mamba2).
+prefill over the page pool), ``paged_mixed_attention`` (fused decode rows +
+one prefill chunk, one dispatch per engine step), ``ssd_scan`` /
+``ssd_decode_step`` (Mamba2).
 
 ``impl`` selection:
   * "pallas"      — the Pallas TPU kernel. On a non-TPU backend every op
@@ -37,6 +39,7 @@ from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_bhsd
 from repro.kernels.paged_attention import (
     paged_attention_bkgd,
+    paged_mixed_attention_rkgd,
     paged_prefill_attention_ckgd,
 )
 from repro.kernels.ssd_scan import ssd_scan_bhsp
@@ -215,6 +218,84 @@ def paged_prefill_attention(
         )
         return out.reshape(c, h, d)
     raise ValueError(f"unknown paged prefill impl {impl!r}")
+
+
+def paged_mixed_attention(
+    q: jax.Array,             # (R, H, D) one query row per batch row
+    k_pages: jax.Array,       # (P, page, KVH, D) shared page pool
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # (R, MP) int32, one block-table row per row
+    last_pos: jax.Array,      # (R,) int32 last attendable position, -1 = dead
+    *,
+    scale: float | None = None,
+    impl: str = "auto",
+    interpret: bool = False,
+    num_decode: int | None = None,
+) -> jax.Array:
+    """Fused mixed-step attention over a paged KV cache. Returns (R, H, D).
+
+    Rows are independent: a decode row carries its own slot's block-table
+    row with ``last_pos = length`` (the just-scattered token), a prefill
+    chunk contributes C consecutive rows sharing one block-table row with
+    ``last_pos = start + i`` for live rows, and padded rows (idle slots,
+    chunk rows past ``valid``) use ``last_pos = -1`` and return exact
+    zeros. One engine step therefore needs ONE attention dispatch. The
+    Pallas kernel (:func:`repro.kernels.paged_attention.
+    paged_mixed_attention_rkgd`) keeps the other paged kernels' shard-local
+    contract — per-shard head slice under the serving executor's
+    ``shard_map``, tables/positions replicated — and
+    ``ref.paged_mixed_attention_ref`` is the oracle and the CPU path.
+
+    ``num_decode`` is an OPTIONAL static structure hint: when set, the
+    caller asserts rows ``[num_decode, R)`` form one prefill chunk — every
+    row repeats the same block-table row, live rows hold contiguous
+    positions ``start + i`` and dead rows are a suffix. The XLA fallback
+    then evaluates decode rows through :func:`ref.paged_attention_ref` and
+    chunk rows through :func:`ref.paged_prefill_attention_ref`, gathering
+    the chunk's K/V ONCE instead of once per chunk row (the generic ref
+    materializes (R, MP*page) keys, which duplicates the shared table C
+    times — ruinous off-TPU). The Pallas kernel is row-generic and ignores
+    the hint; the generic ref stays the oracle the fuzz harness compares
+    both lowerings against.
+    """
+    if impl == "auto":
+        impl = _auto_impl()
+    impl, interpret = _resolve_pallas_impl(
+        impl, interpret, "paged_mixed_attention"
+    )
+    r, h, d = q.shape
+    kvh = k_pages.shape[2]
+    assert kvh and h % kvh == 0, (
+        f"q heads ({h}) must be a multiple of kv heads ({kvh}) — a sharded "
+        f"caller must slice both by the same tensor-parallel degree"
+    )
+    if impl in ("naive", "xla_chunked"):
+        if num_decode is None or not 0 < num_decode < r:
+            return ref.paged_mixed_attention_ref(
+                q, k_pages, v_pages, block_tables, last_pos, scale=scale
+            )
+        s = num_decode
+        dec = ref.paged_attention_ref(
+            q[:s], k_pages, v_pages, block_tables[:s], last_pos[:s] + 1,
+            scale=scale,
+        )
+        # dead chunk rows are a suffix, so the live count and the cursor
+        # fall out of last_pos; valid == 0 masks every chunk row to zeros
+        valid = jnp.sum(last_pos[s:] >= 0).astype(jnp.int32)
+        start = jnp.maximum(last_pos[s], 0)
+        chk = ref.paged_prefill_attention_ref(
+            q[s:], k_pages, v_pages, block_tables[s], start, valid,
+            scale=scale,
+        )
+        return jnp.concatenate([dec, chk], axis=0)
+    if impl == "pallas":
+        qg = q.reshape(r, kvh, h // kvh, d)
+        out = paged_mixed_attention_rkgd(
+            qg, k_pages, v_pages, block_tables, last_pos,
+            scale=scale, interpret=interpret,
+        )
+        return out.reshape(r, h, d)
+    raise ValueError(f"unknown paged mixed impl {impl!r}")
 
 
 # ---------------------------------------------------------------------------

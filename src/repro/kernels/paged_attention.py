@@ -1,6 +1,6 @@
-"""Paged attention (decode AND chunked prefill) as Pallas TPU kernels.
+"""Paged attention (decode, chunked prefill, fused mixed) as Pallas TPU kernels.
 
-Two kernels over the same page-pool layout (`kv_cache.PagedKVCache`):
+Three kernels over the same page-pool layout (`kv_cache.PagedKVCache`):
 
 * ``paged_attention_bkgd`` — DECODE: one query token per sequence attends
   over K/V stored in the shared page pool; pages are gathered *inside the
@@ -15,6 +15,13 @@ Two kernels over the same page-pool layout (`kv_cache.PagedKVCache`):
   already scattered into the pages). Oracle:
   ``ref.paged_prefill_attention_ref``; padded queries (``i >= valid``)
   return exact zeros. The C=1, start=length-1 case degenerates to decode.
+* ``paged_mixed_attention_rkgd`` — FUSED MIXED STEP: R rows, each carrying
+  its OWN block-table row and a single scalar ``last_pos`` (the last
+  attendable absolute position; ``-1`` = dead row -> exact zeros). Decode
+  rows (``last_pos = length``, the just-scattered token) and one prefill
+  chunk's C rows (``last_pos = start + i`` for live rows) ride in one
+  dispatch, so a full-occupancy engine step is one kernel launch. Oracle:
+  ``ref.paged_mixed_attention_ref``; subsumes both kernels above.
 
 Decode grid: (batch, kv-head, logical-page), page innermost — TPU grid
 steps are sequential, so the online-softmax state (acc, m, l) lives in VMEM
@@ -308,3 +315,133 @@ def paged_prefill_attention_ckgd(
         interpret=interpret,
     )(block_table, meta, qf, k_pages, v_pages)
     return jnp.transpose(out.reshape(kvh, c, group, d), (1, 0, 2, 3))
+
+
+# ---------------------------------------------------------------------------
+# fused mixed step (decode rows + one prefill chunk, one dispatch)
+# ---------------------------------------------------------------------------
+
+
+def _paged_mixed_kernel(
+    bt_ref,    # (R, MP) int32 scalar-prefetch: block-table row per query row
+    lp_ref,    # (R,)   int32 scalar-prefetch: last attendable position, -1 dead
+    q_ref, k_ref, v_ref,  # VMEM blocks
+    o_ref,
+    acc_ref, m_ref, l_ref,  # VMEM scratch
+    *,
+    scale: float,
+    page_size: int,
+    num_logical_pages: int,
+):
+    r = pl.program_id(0)
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    lp = lp_ref[r]
+    # pages entirely past the row's last attendable position hold nothing
+    # it may read: skip. A dead row (lp < 0) skips every page -> exact zeros.
+    run = p * page_size <= lp
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)        # (G, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)     # (page, D)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                   # (G, page)
+        pos = p * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, dimension=1
+        )
+        # the ONE mask of the fused step: decode causality, chunk causality,
+        # partial pages and dead rows are all "position <= last_pos"
+        ok = pos <= lp
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_ref[:, 0]
+        l_prev = l_ref[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        pexp = jnp.exp(s - m_new[:, None])
+        pexp = jnp.where(ok, pexp, 0.0)  # exact zeros on masked slots
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(pexp, axis=-1)
+        pv = jax.lax.dot_general(
+            pexp, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+        m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+
+    @pl.when(p == num_logical_pages - 1)
+    def _finalize():
+        # max(l, eps): dead rows (last_pos < 0) finalize to exact zeros
+        l = l_ref[:, 0]
+        o_ref[0, 0] = (
+            acc_ref[...] / jnp.maximum(l, 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+
+
+def paged_mixed_attention_rkgd(
+    q: jax.Array,             # (R, KVH, G, D) grouped query, one row per row
+    k_pages: jax.Array,       # (P, page, KVH, D)
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # (R, MP) int32, one block-table row per row
+    last_pos: jax.Array,      # (R,) int32 last attendable position, -1 = dead
+    *,
+    scale: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused mixed-step paged attention; the decode kernel's grid with the
+    prefill kernel's per-row causal predicate collapsed to one prefetched
+    scalar per row. Same shard-local contract as the other two kernels
+    (per-shard head slice under the executor's ``shard_map``, tables and
+    positions replicated). Returns (R, KVH, G, D) in q.dtype."""
+    r, kvh, group, d = q.shape
+    _, page_size, pkvh, _ = k_pages.shape
+    assert pkvh == kvh, (pkvh, kvh)
+    mp = block_tables.shape[1]
+    scale = scale if scale is not None else d ** -0.5
+
+    grid = (r, kvh, mp)
+    kernel = functools.partial(
+        _paged_mixed_kernel,
+        scale=scale,
+        page_size=page_size,
+        num_logical_pages=mp,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (1, 1, group, d), lambda r_, h_, p_, bt, lp: (r_, h_, 0, 0)
+            ),
+            # physical page comes from the row's prefetched block table
+            pl.BlockSpec(
+                (1, page_size, 1, d),
+                lambda r_, h_, p_, bt, lp: (bt[r_, p_], 0, h_, 0),
+            ),
+            pl.BlockSpec(
+                (1, page_size, 1, d),
+                lambda r_, h_, p_, bt, lp: (bt[r_, p_], 0, h_, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, group, d), lambda r_, h_, p_, bt, lp: (r_, h_, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((group, d), jnp.float32),       # acc
+            pltpu.VMEM((group, _LANES), jnp.float32),  # m (col 0 used)
+            pltpu.VMEM((group, _LANES), jnp.float32),  # l (col 0 used)
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((r, kvh, group, d), q.dtype),
+        interpret=interpret,
+    )(block_tables, last_pos, q, k_pages, v_pages)

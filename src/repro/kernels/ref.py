@@ -16,6 +16,12 @@ models use on non-TPU backends.
   degenerates to ``paged_attention_ref``; oracle for the Pallas
   chunk-prefill kernel (``paged_attention.paged_prefill_attention_ckgd``)
   and the XLA/CPU serving path.
+* ``paged_mixed_attention_ref``   — fused mixed step: R independent rows,
+  each a (block-table row, last attended position) pair — decode rows and
+  one prefill chunk's rows share a single dispatch. ``last_pos < 0`` marks
+  a dead/padded row (exact zeros). Oracle for the Pallas mixed kernel
+  (``paged_attention.paged_mixed_attention_rkgd``) and the XLA fused-step
+  serving path; subsumes both refs above.
 * ``ssd_sequential``              — Mamba2 SSD as the literal per-token
   recurrence.
 * ``ssd_chunked``                 — the SSD block-decomposition (Dao & Gu
@@ -216,6 +222,52 @@ def paged_prefill_attention_ref(
     out = jnp.einsum("ckgs,skd->ckgd", p / jnp.maximum(l, 1e-30),
                      vals.astype(jnp.float32))
     return out.reshape(c, h, d).astype(q.dtype)
+
+
+def paged_mixed_attention_ref(
+    q: jax.Array,             # (R, H, D) one query row per batch row
+    k_pages: jax.Array,       # (P, page, KVH, D) shared page pool
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # (R, MP) int32 block-table row per query row
+    last_pos: jax.Array,      # (R,) int32 last attendable position, -1 = dead
+    *,
+    scale: float | None = None,
+) -> jax.Array:
+    """Mixed-batch oracle: every row attends positions ``<= last_pos[r]``.
+
+    One predicate covers the whole fused step: a decode row at length L
+    (its new token already scattered at position L) uses ``last_pos = L``;
+    chunk query i of a prefill at cursor ``start`` uses
+    ``last_pos = start + i``; padded rows (idle decode slots, chunk rows
+    past ``valid``) use ``last_pos = -1`` and return exact zeros — the same
+    no-NaN convention as :func:`paged_attention_ref`, of which this is the
+    per-row generalization (decode is ``last_pos = lengths - 1``; a chunk
+    is C consecutive rows sharing one block-table row). Returns (R, H, D)
+    in q.dtype.
+    """
+    r, h, d = q.shape
+    _, page, kvh, _ = k_pages.shape
+    mp = block_tables.shape[1]
+    group = h // kvh
+    scale = scale if scale is not None else d ** -0.5
+
+    # (R, MP, page, KVH, D) -> (R, MP*page, KVH, D): logical contiguous view
+    keys = k_pages[block_tables].reshape(r, mp * page, kvh, d)
+    vals = v_pages[block_tables].reshape(r, mp * page, kvh, d)
+
+    qg = q.reshape(r, kvh, group, d).astype(jnp.float32) * scale
+    scores = jnp.einsum(
+        "rkgd,rskd->rkgs", qg, keys.astype(jnp.float32)
+    )  # (R, KVH, G, MP*page)
+    ok = jnp.arange(mp * page)[None, :] <= last_pos[:, None]  # (R, S)
+    scores = jnp.where(ok[:, None, None, :], scores, NEG_INF)
+    # explicit normalization (not jax.nn.softmax) so an all-masked row gives 0
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m) * ok[:, None, None, :]
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("rkgs,rskd->rkgd", p / jnp.maximum(l, 1e-30),
+                     vals.astype(jnp.float32))
+    return out.reshape(r, h, d).astype(q.dtype)
 
 
 # ---------------------------------------------------------------------------

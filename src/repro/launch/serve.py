@@ -16,7 +16,12 @@ Prompts prefill in fixed-size chunks interleaved with decode
 (``--prefill-chunk``, 0 restores whole-prompt prefill) and identical prompt
 prefixes are served from shared copy-on-write pages (``--no-prefix-sharing``
 to disable; ``--shared-prefix N`` synthesizes the pipeline-rerun workload
-that exercises it).
+that exercises it). By default the paged engine runs its *fused* step — the
+step's prefill chunk and every decode slot go down in one mixed dispatch
+(``--step-mode interleaved`` restores the two-dispatch step for A/B;
+``--token-budget`` caps rows per fused step). The utilization line reports
+the per-dispatch batch composition (decode/prefill/padded rows and the
+fused-dispatch fraction) alongside the occupancy gauges.
 
 The paged engine's executor runs under ``shard_map`` on a ``("model",)``
 mesh; ``--mesh auto`` (default) picks the largest tensor-parallel degree
@@ -65,6 +70,16 @@ def main() -> int:
                          "sharded executor — 'auto' picks the largest "
                          "feasible degree over local devices, an integer "
                          "forces that many (1 disables sharding)")
+    ap.add_argument("--step-mode", default="fused",
+                    choices=["fused", "interleaved"],
+                    help="paged engine: 'fused' (default) runs every decode "
+                         "slot and the step's prefill chunk in ONE mixed "
+                         "dispatch; 'interleaved' keeps the two-dispatch "
+                         "pre-fusion step for A/B comparison — streams are "
+                         "byte-identical either way")
+    ap.add_argument("--token-budget", type=int, default=0,
+                    help="paged engine, fused mode: cap decode rows + chunk "
+                         "tokens per step (Sarathi-style); 0 disables the cap")
     ap.add_argument("--attn-impl", default="auto",
                     choices=["auto", "pallas", "pallas_interpret",
                              "xla_chunked", "naive"],
@@ -157,6 +172,8 @@ def main() -> int:
                 prefix_sharing=not args.no_prefix_sharing,
                 admission=admission,
                 attn_impl=args.attn_impl,
+                step_mode=args.step_mode,
+                token_budget=args.token_budget or None,
             )
         return GenerationEngine(cfg, params, max_len=max_len,
                                 max_batch=args.max_batch, admission=admission)

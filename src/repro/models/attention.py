@@ -228,6 +228,70 @@ def prefill_chunk_attention_paged(
     return o, {"k": kc, "v": vc}
 
 
+def mixed_step_attention_paged(
+    p: dict,
+    x: jax.Array,             # (R, 1, D) one token per row (decode + chunk)
+    layer_pages: dict,        # {"k": (P,page,KVH,Dh), "v": ...} this layer's pool
+    block_tables: jax.Array,  # (R, MP) int32, one block-table row per row
+    positions: jax.Array,     # (R,) int32 absolute position per row, -1 = dead
+    cfg: ModelConfig,
+    *,
+    rope: bool = True,
+    attn_impl: str = "xla_chunked",
+    num_decode: int | None = None,
+) -> tuple[jax.Array, dict]:
+    """Fused mixed step: decode rows AND one prefill chunk's rows scatter
+    their K/V into the page pool in ONE functional update, then every row
+    attends its own block table up to its own position (``<= positions[r]``)
+    through ``ops.paged_mixed_attention``.
+
+    A decode slot contributes one row at ``positions[r] = length``; chunk
+    token i contributes a row at ``positions[r] = start + i`` sharing the
+    chunk slot's block-table row — because the combined scatter lands
+    before any row reads, chunk row i sees chunk rows ``< i`` exactly as
+    the unfused chunk path does. Dead rows (idle slots, chunk padding) use
+    ``positions[r] = -1``: their write is dropped out of bounds and their
+    attention output is exact zeros (discarded by the caller).
+
+    Scatter-index uniqueness (the same argument as decode): live rows write
+    distinct (page, offset) pairs — decode rows own their writable page
+    (``ensure_append_capacity`` COWs shared pages first), chunk rows write
+    the chunk slot's exclusively-owned fresh pages (prefix pages are only
+    published AFTER the chunk covering them dispatched), and dead rows are
+    dropped — so decode/chunk fusion never creates a read-write hazard and
+    the dispatch order of the two halves is immaterial.
+
+    ``num_decode`` (static) forwards the mixed-batch structure hint to
+    :func:`repro.kernels.ops.paged_mixed_attention`: rows past it are one
+    chunk sharing a block-table row, which lets the XLA fallback gather
+    the chunk's K/V once instead of per row (the Pallas path ignores it).
+    """
+    live = positions >= 0
+    pos = jnp.maximum(positions, 0)
+    q, k, v = _project_qkv(p, x, cfg, pos[:, None], rope)
+    num_pages, page = layer_pages["k"].shape[:2]
+    phys = jnp.take_along_axis(
+        block_tables, (pos // page)[:, None], axis=1
+    )[:, 0]
+    # dead rows and null-page entries write out of bounds and are DROPPED
+    phys = jnp.where(live & (phys != 0), phys, num_pages)
+    off = pos % page
+    kc = layer_pages["k"].at[phys, off].set(
+        k[:, 0].astype(layer_pages["k"].dtype), mode="drop"
+    )
+    vc = layer_pages["v"].at[phys, off].set(
+        v[:, 0].astype(layer_pages["v"].dtype), mode="drop"
+    )
+    out = ops.paged_mixed_attention(
+        q[:, 0], kc, vc, block_tables, positions,
+        scale=cfg.head_dim ** -0.5, impl=attn_impl, num_decode=num_decode,
+    ).astype(x.dtype)  # (R, H_local, Dh)
+    # same sharding contract as decode: per-shard head slice of q/kv and the
+    # page pool, tables/positions replicated, row-parallel wo reduced here
+    o = psum_tp(jnp.einsum("bhk,hkd->bd", out, p["wo"]))[:, None, :]
+    return o, {"k": kc, "v": vc}
+
+
 def cross_attention(
     p: dict,
     x: jax.Array,          # (B, Sq, D) decoder states

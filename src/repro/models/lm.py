@@ -651,6 +651,61 @@ class DecoderLM:
         ))[:, 0]
         return new_pages, logits
 
+    def mixed_step_paged(self, params, pages, block_tables, positions,
+                         tokens, *, num_decode, chunk_valid):
+        """Fused mixed step: ``num_decode`` decode rows plus one prefill
+        chunk's rows in ONE forward pass over the paged KV pool.
+
+        tokens (R, 1) int32 with R = num_decode + C: rows ``[0,
+        num_decode)`` are the decode slots (their usual fixed width), rows
+        ``[num_decode, R)`` are the chunk. block_tables (R, MP) int32 gives
+        every row its own table (chunk rows repeat the chunk slot's row);
+        positions (R,) int32 is each row's absolute position, -1 for dead
+        rows (idle slots, chunk padding). ``num_decode`` is static;
+        ``chunk_valid`` (scalar int32) selects the chunk's sampling row.
+
+        Returns (new_pages, logits (num_decode + 1, Vp) f32): one logits
+        row per decode slot plus the chunk's row ``chunk_valid - 1`` (the
+        first-token sampling position — meaningful on the prompt's final
+        chunk, garbage and ignored before that). Unembedding only touches
+        those num_decode + 1 rows, so the fused step pays the chunk's extra
+        rows in attention/MLP but not in the vocab projection.
+        """
+        cfg = self.cfg
+        assert cfg.family in ("dense", "moe"), cfg.family
+        x = jnp.take(params["embed"], tokens, axis=0)  # (R,1,D)
+
+        def body(x, inp):
+            pl, cl = inp
+            h = rms_norm(x, pl["ln1"], cfg.norm_eps)
+            h, new_cl = attn.mixed_step_attention_paged(
+                pl["attn"], h, cl, block_tables, positions, cfg,
+                attn_impl=self.attn_impl, num_decode=num_decode,
+            )
+            x = x + h
+            h = rms_norm(x, pl["ln2"], cfg.norm_eps)
+            if cfg.family == "moe":
+                h, _ = moe_mod.moe_block(pl["moe"], h, cfg)
+            else:
+                h = swiglu(h, pl["mlp"]["w_gate"], pl["mlp"]["w_up"],
+                           pl["mlp"]["w_down"])
+            return x + h, new_cl
+
+        x, new_pages = jax.lax.scan(
+            body, x, (params["layers"], {"k": pages["k"], "v": pages["v"]})
+        )
+        # decode rows + the chunk's sampling row, then ONE unembed
+        xc = jax.lax.dynamic_slice_in_dim(
+            x, num_decode + jnp.maximum(chunk_valid - 1, 0), 1, axis=0
+        )
+        x = jnp.concatenate([x[:num_decode], xc], axis=0)  # (S+1, 1, D)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = all_gather_logits(jnp.einsum(
+            "bsd,dv->bsv", x, self._unembed_weight(params),
+            preferred_element_type=jnp.float32,
+        ))[:, 0]
+        return new_pages, logits
+
     # ------------------------------------------------------------------
     # chunked prefill (continuous batching)
     # ------------------------------------------------------------------

@@ -286,6 +286,8 @@ class ContinuousBatchingEngine(EngineBase):
         prefix_sharing: bool = True,
         admission: AdmissionPolicy | None = None,
         max_preemptions: int | None = None,
+        step_mode: str = "fused",
+        token_budget: int | None = None,
     ):
         assert not cfg.is_encoder_decoder, "paged engine is decoder-only"
         assert cfg.family in ("dense", "moe", "vlm"), (
@@ -305,6 +307,14 @@ class ContinuousBatchingEngine(EngineBase):
         self._chunked = prefill_chunk is not None and cfg.family in ("dense", "moe")
         self.prefill_chunk = prefill_chunk
         self.prefix_sharing = prefix_sharing and self._chunked
+        if step_mode not in ("fused", "interleaved"):
+            raise ValueError(
+                f"step_mode must be 'fused' or 'interleaved', got {step_mode!r}"
+            )
+        if token_budget is not None and token_budget < 1:
+            raise ValueError(f"token_budget must be >= 1, got {token_budget}")
+        self.step_mode = step_mode
+        self.token_budget = token_budget
         self.cache = PagedKVCache(
             num_layers=cfg.num_layers,
             num_kv_heads=cfg.eff_kv_heads,
@@ -321,6 +331,7 @@ class ContinuousBatchingEngine(EngineBase):
             chunked=self._chunked,
             prefix_sharing=self.prefix_sharing,
             extra_ctx=self.nf,
+            token_budget=token_budget,
         )
         self.executor = ModelExecutor(
             cfg, params, self.cache, max_len=max_len, attn_impl=attn_impl
@@ -435,9 +446,85 @@ class ContinuousBatchingEngine(EngineBase):
     # stepping
     # ------------------------------------------------------------------
     def step(self) -> list[StreamEvent]:
-        """Admit, run (at most) one prefill chunk, run one decode step over
-        all decoding slots, evict finished sequences. Returns the lifecycle
-        events produced (token deltas, finishes, preemptions)."""
+        """Run one engine step and return the lifecycle events produced
+        (token deltas, finishes, preemptions).
+
+        ``step_mode="fused"`` (default): admit, build ONE token-budgeted
+        :class:`~repro.serving.scheduler.StepPlan` and dispatch it — every
+        decode slot and (at most) one prefill chunk in a single
+        Pallas-backed executor call. ``step_mode="interleaved"`` keeps the
+        pre-fusion behavior (one chunk dispatch, then one decode dispatch)
+        for A/B comparison; both modes produce byte-identical streams."""
+        if self.step_mode == "interleaved":
+            return self._step_interleaved()
+        return self._step_fused()
+
+    def _record_batch(self, decode_rows: int, prefill_live: int,
+                      rows: int, fused: bool) -> None:
+        self.utilization.record_batch(
+            decode_rows=decode_rows, prefill_rows=prefill_live,
+            padded_rows=rows - decode_rows - prefill_live, fused=fused,
+        )
+
+    def _dispatch_plan(self, plan) -> np.ndarray | None:
+        """Run one plan through the executor and do the chunk bookkeeping
+        (cursor advance, prefix publication, first-token delivery). Returns
+        the decode tokens for the engine harvest (None: no decode rows)."""
+        chunk, n_dec = plan.chunk, len(plan.decode_slots)
+        rows = n_dec and self.max_slots
+        if chunk is not None:
+            rows += len(chunk.tokens)
+        self._record_batch(n_dec, chunk.valid if chunk else 0, rows,
+                           fused=bool(chunk is not None and n_dec))
+        toks, ctok = self.executor.step(plan)
+        if chunk is not None:
+            self.stats["prefill_chunks"] += 1
+            if self.scheduler.complete_chunk(chunk):
+                self._first_token(chunk.slot, chunk.seq, ctok)
+        return toks
+
+    def _step_fused(self) -> list[StreamEvent]:
+        sched = self.scheduler
+        self._admit()
+        # with no decode in flight there is no stall to bound, so drain
+        # chunk-only plans back-to-back until a sequence becomes decodable
+        # (cold start, post-burst refill)
+        while not sched.has_decodable():
+            plan = sched.build_step_plan()
+            if plan.chunk is None:
+                return self._drain_events()
+            self._dispatch_plan(plan)
+            self._admit()
+
+        # every decode row needs a writable page BEFORE the plan captures
+        # block tables (growth/COW dirties them; eviction can also claim
+        # the slot a chunk would have targeted)
+        for seq in sched.ensure_decode_capacity():
+            self._handle_preempted(seq)
+        if not sched.has_decodable():
+            return self._drain_events()  # preemption can empty the decode set
+
+        decoding, slots = sched.occupancy()
+        used, total = sched.page_utilization()
+        self.utilization.record(active=decoding, slots=slots,
+                                pages_used=used, pages_total=total)
+        plan = sched.build_step_plan()
+        toks = self._dispatch_plan(plan)
+        self.stats["decode_steps"] += 1
+        now = time.perf_counter()
+        # harvest exactly the slots the plan dispatched — the chunk slot
+        # may have become decodable mid-step and is NOT in this batch
+        for slot in plan.decode_slots:
+            seq = sched.slots[slot]
+            tok = int(toks[slot])
+            sched.append_decoded(slot, tok)
+            if self._deliver(seq.handle, tok, len(seq.tokens) - 1, now):
+                sched.release(slot)
+        return self._drain_events()
+
+    def _step_interleaved(self) -> list[StreamEvent]:
+        """Pre-fusion step: one chunk dispatch interleaved with one decode
+        dispatch (kept for A/B against the fused step)."""
         sched = self.scheduler
         self._admit()
         ran = self._prefill_step()
@@ -460,14 +547,14 @@ class ContinuousBatchingEngine(EngineBase):
         used, total = sched.page_utilization()
         self.utilization.record(active=decoding, slots=slots,
                                 pages_used=used, pages_total=total)
+        self._record_batch(decoding, 0, self.max_slots, fused=False)
         inputs = sched.build_decode_inputs() if sched.dirty else None
         toks = self.executor.decode(inputs)
         self.stats["decode_steps"] += 1
         now = time.perf_counter()
         for slot, seq in sched.decoding():
-            self.cache.append(slot)
             tok = int(toks[slot])
-            seq.tokens.append(tok)
+            sched.append_decoded(slot, tok)
             if self._deliver(seq.handle, tok, len(seq.tokens) - 1, now):
                 sched.release(slot)
         return self._drain_events()

@@ -51,7 +51,7 @@ from repro.models.lm import padded_vocab
 from repro.parallel.axes import logical_to_spec
 from repro.parallel.collectives import tensor_parallel
 from repro.serving.kv_cache import write_prefill_pages
-from repro.serving.scheduler import DecodeInputs, PrefillChunk
+from repro.serving.scheduler import DecodeInputs, PrefillChunk, StepPlan
 
 __all__ = [
     "ModelExecutor",
@@ -212,14 +212,17 @@ class ModelExecutor:
         self.params = self._place(params)
 
         self._decode_fns: dict[bool, object] = {}
+        self._mixed_fns: dict[bool, object] = {}
         self._chunk_fn = None
         self._prefill_fns: dict[int, object] = {}
-        # device mirrors of the last decode batch (refreshed only when the
-        # scheduler reports a composition change)
+        # device mirrors of the last decode batch, PACKED into one int32
+        # and one f32 array (refreshed only when the scheduler reports a
+        # composition change). Packing matters off-TPU: per-transfer
+        # dispatch overhead dominates small-step serving, so a refresh is
+        # two device_puts instead of nine, and a chunk rides in two more
+        # instead of six (see ``_DI_COLS``).
         self._greedy_only = True
-        self._bt = self._lens = self._active = None
-        self._toks = self._temps = self._tks = self._tps = None
-        self._seeds = self._idx = None
+        self._di = self._df = None
 
     # ------------------------------------------------------------------
     # sharding
@@ -251,55 +254,75 @@ class ModelExecutor:
     # ------------------------------------------------------------------
     # decode
     # ------------------------------------------------------------------
+    # Packed decode batch ``di`` (S, MP+6) int32: block table row, then
+    # _DI_COLS-indexed columns [lens, active, tokens, top_ks, seeds, idx];
+    # ``df`` (S, 2) f32: [temps, top_ps]. The jitted fns slice at static
+    # offsets (MP is fixed per cache) and return an ADVANCED ``di`` —
+    # lens/idx stepped, sampled tokens written back — so the steady-state
+    # loop feeds device outputs straight into the next step.
+    _DI_COLS = 6
+
     def _decode_fn(self, greedy_only: bool):
         """ONE dispatch per decode step: sharded model step + sampling
         fused, logits never leave the device (the vocab gather is an
         on-device collective). ``greedy_only`` is a host-known flag — the
         all-greedy compile pays a plain argmax and the per-row
         top-k/top-p/seeded sampler only costs when a sampled request is in
-        flight. Sampled tokens / advanced lengths / advanced sample
-        indices return replicated and feed the next step directly."""
+        flight. The advanced packed batch returns replicated and feeds the
+        next step directly."""
         if greedy_only not in self._decode_fns:
             cfg = self.cfg
 
-            def fn(params, pages, bt, lens, active, tokens, temps,
-                   tks, tps, seeds, idx):
+            def fn(params, pages, di, df):
+                mp = di.shape[1] - self._DI_COLS
+                bt, lens, active = di[:, :mp], di[:, mp], di[:, mp + 1]
                 with self._tp_ctx():
                     pages, logits = self.model.decode_step_paged(
-                        params, pages, bt, lens, tokens
+                        params, pages, bt, lens, di[:, mp + 2:mp + 3]
                     )
                     if greedy_only:
                         toks = jnp.argmax(
                             logits[..., :cfg.vocab_size], axis=-1
                         ).astype(jnp.int32)
                     else:
-                        toks = sample_tokens(logits, temps, tks, tps, seeds,
-                                             idx, cfg.vocab_size)
-                return pages, toks[:, None], lens + active, idx + active
+                        toks = sample_tokens(logits, df[:, 0], di[:, mp + 3],
+                                             df[:, 1], di[:, mp + 4],
+                                             di[:, mp + 5], cfg.vocab_size)
+                di = di.at[:, mp].set(lens + active)
+                di = di.at[:, mp + 2].set(toks)
+                di = di.at[:, mp + 5].add(active)
+                return pages, di, toks
 
             page_specs = {"k": PAGE_SPEC, "v": PAGE_SPEC}
             smapped = self._smap(
                 fn,
-                in_specs=(self.param_specs, page_specs) + (P(),) * 9,
-                out_specs=(page_specs, P(), P(), P()),
+                in_specs=(self.param_specs, page_specs) + (P(),) * 2,
+                out_specs=(page_specs, P(), P()),
             )
             self._decode_fns[greedy_only] = jax.jit(
-                smapped, donate_argnums=(1,)
+                smapped, donate_argnums=(1, 2)
             )
         return self._decode_fns[greedy_only]
 
     def refresh(self, inputs: DecodeInputs) -> None:
-        """Mirror a freshly assembled decode batch to the device."""
+        """Mirror a freshly assembled decode batch to the device (two
+        transfers: the packed int32 batch and the packed f32 sampling
+        params)."""
         self._greedy_only = inputs.greedy_only
-        self._bt = jnp.asarray(inputs.block_tables)
-        self._lens = jnp.asarray(inputs.lengths)
-        self._active = jnp.asarray(inputs.active)
-        self._toks = jnp.asarray(inputs.tokens)
-        self._temps = jnp.asarray(inputs.temps)
-        self._tks = jnp.asarray(inputs.top_ks)
-        self._tps = jnp.asarray(inputs.top_ps)
-        self._seeds = jnp.asarray(inputs.seeds)
-        self._idx = jnp.asarray(inputs.idx)
+        bt = inputs.block_tables
+        s, mp = bt.shape
+        di = np.empty((s, mp + self._DI_COLS), np.int32)
+        di[:, :mp] = bt
+        di[:, mp] = inputs.lengths
+        di[:, mp + 1] = inputs.active
+        di[:, mp + 2] = inputs.tokens[:, 0]
+        di[:, mp + 3] = inputs.top_ks
+        di[:, mp + 4] = inputs.seeds
+        di[:, mp + 5] = inputs.idx
+        self._di = jnp.asarray(di)
+        self._df = jnp.asarray(
+            np.stack([inputs.temps, inputs.top_ps], axis=1).astype(np.float32)
+        )
 
     def decode(self, inputs: DecodeInputs | None = None) -> np.ndarray:
         """Run one decode step. ``inputs`` refreshes the device mirrors
@@ -310,13 +333,129 @@ class ModelExecutor:
             self.refresh(inputs)
         pages = {"k": self.cache.k_pages, "v": self.cache.v_pages}
         fn = self._decode_fn(self._greedy_only)
-        pages, self._toks, self._lens, self._idx = fn(
-            self.params, pages, self._bt, self._lens, self._active,
-            self._toks, self._temps, self._tks, self._tps, self._seeds,
-            self._idx,
+        pages, self._di, toks = fn(self.params, pages, self._di, self._df)
+        self.cache.set_pages(pages["k"], pages["v"])
+        return np.asarray(toks)
+
+    # ------------------------------------------------------------------
+    # fused mixed step (decode batch + one prefill chunk, one dispatch)
+    # ------------------------------------------------------------------
+    def _pack_chunk(self, chunk) -> tuple[jax.Array, jax.Array]:
+        """Pack one prefill chunk's host state into two transfers:
+        ``ci`` (MP+C+4,) int32 = [block-table row | padded tokens | start,
+        valid, top_k, seed] and ``cf`` (2,) f32 = [temperature, top_p]."""
+        sp = chunk.seq.request.sampling
+        row = self.cache.block_tables[chunk.slot]
+        mp, c = row.shape[0], chunk.tokens.shape[0]
+        ci = np.empty(mp + c + 4, np.int32)
+        ci[:mp] = row
+        ci[mp:mp + c] = chunk.tokens
+        ci[mp + c:] = (chunk.start, chunk.valid, sp.top_k,
+                       chunk.seq.handle.seed)
+        cf = np.array([sp.temperature, sp.top_p], np.float32)
+        return jnp.asarray(ci), jnp.asarray(cf)
+
+    def _mixed_fn(self, greedy_only: bool):
+        """ONE dispatch per mixed step: every decode slot AND one prefill
+        chunk run a single sharded model step + fused sampling over S+C
+        single-token rows — the full-occupancy step the interleaved path's
+        two dispatches approximate. Decode rows keep their exact decode
+        semantics (same device-mirror feedback: sampled tokens / advanced
+        lengths / advanced sample indices return replicated and feed the
+        next step); the chunk contributes C rows sharing its slot's
+        block-table row and one extra sampled token at index 0, meaningful
+        only on the prompt's final chunk. ``greedy_only`` covers the chunk
+        too — a sampled chunk (temperature > 0) selects the sampling
+        compile, where greedy rows still reduce to argmax, so streams
+        cannot depend on the compile chosen."""
+        if greedy_only not in self._mixed_fns:
+            cfg = self.cfg
+
+            def fn(params, pages, di, df, ci, cf):
+                s = di.shape[0]
+                mp = di.shape[1] - self._DI_COLS
+                c = ci.shape[0] - mp - 4
+                bt, lens, active = di[:, :mp], di[:, mp], di[:, mp + 1]
+                crow, ctoks = ci[:mp], ci[mp:mp + c]
+                cstart, cvalid = ci[mp + c], ci[mp + c + 1]
+                with self._tp_ctx():
+                    # rows [0,S): decode slots at position = length (-1 when
+                    # idle); rows [S,S+C): the chunk at start+i (-1 past valid)
+                    cidx = jnp.arange(c, dtype=jnp.int32)
+                    positions = jnp.concatenate([
+                        jnp.where(active == 1, lens, -1),
+                        jnp.where(cidx < cvalid, cstart + cidx, -1),
+                    ]).astype(jnp.int32)
+                    tables = jnp.concatenate([
+                        bt, jnp.broadcast_to(crow, (c, mp)),
+                    ])
+                    pages, logits = self.model.mixed_step_paged(
+                        params, pages, tables, positions,
+                        jnp.concatenate([di[:, mp + 2:mp + 3],
+                                         ctoks[:, None]]),
+                        num_decode=s, chunk_valid=cvalid,
+                    )  # logits (S+1, Vp): decode rows + the chunk's row
+                    if greedy_only:
+                        toks = jnp.argmax(
+                            logits[..., :cfg.vocab_size], axis=-1
+                        ).astype(jnp.int32)
+                    else:
+                        toks = sample_tokens(
+                            logits,
+                            jnp.concatenate([df[:, 0], cf[0][None]]),
+                            jnp.concatenate([di[:, mp + 3],
+                                             ci[mp + c + 2][None]]),
+                            jnp.concatenate([df[:, 1], cf[1][None]]),
+                            jnp.concatenate([di[:, mp + 4],
+                                             ci[mp + c + 3][None]]),
+                            jnp.concatenate([di[:, mp + 5],
+                                             jnp.zeros((1,), jnp.int32)]),
+                            cfg.vocab_size,
+                        )
+                dtoks = toks[:s]
+                di = di.at[:, mp].set(lens + active)
+                di = di.at[:, mp + 2].set(dtoks)
+                di = di.at[:, mp + 5].add(active)
+                return pages, di, dtoks, toks[s]
+
+            page_specs = {"k": PAGE_SPEC, "v": PAGE_SPEC}
+            smapped = self._smap(
+                fn,
+                in_specs=(self.param_specs, page_specs) + (P(),) * 4,
+                out_specs=(page_specs, P(), P(), P()),
+            )
+            self._mixed_fns[greedy_only] = jax.jit(
+                smapped, donate_argnums=(1, 2)
+            )
+        return self._mixed_fns[greedy_only]
+
+    def step(self, plan: StepPlan) -> tuple[np.ndarray | None, int | None]:
+        """Execute one step plan. Returns ``(decode_toks, chunk_tok)``:
+        the sampled token per slot ((S,) int32 on the host, None when the
+        plan had no decode rows) and the chunk's sampled first token (None
+        when the plan had no chunk; meaningful only on a final chunk).
+
+        Degenerate plans route to the specialized dispatches — chunk-only
+        (cold start / post-burst refill) runs the chunk kernel without S
+        dead decode rows, decode-only (steady state between prefills) runs
+        the existing decode step with its zero-transfer device mirrors."""
+        chunk = plan.chunk
+        if not plan.decode_slots:
+            ctok = self.prefill_chunk(chunk) if chunk is not None else None
+            return None, ctok
+        if chunk is None:
+            return self.decode(plan.decode), None
+        if plan.decode is not None:
+            self.refresh(plan.decode)
+        sp = chunk.seq.request.sampling
+        fn = self._mixed_fn(self._greedy_only and sp.temperature <= 0.0)
+        ci, cf = self._pack_chunk(chunk)
+        pages = {"k": self.cache.k_pages, "v": self.cache.v_pages}
+        pages, self._di, toks, ctok = fn(
+            self.params, pages, self._di, self._df, ci, cf
         )
         self.cache.set_pages(pages["k"], pages["v"])
-        return np.asarray(self._toks)[:, 0]
+        return np.asarray(toks), int(ctok)
 
     # ------------------------------------------------------------------
     # chunked prefill
@@ -331,25 +470,28 @@ class ModelExecutor:
         ``ops.paged_prefill_attention``) sees the local kv-head slice of
         the page pool with the block-table row replicated."""
         if self._chunk_fn is None:
+            mp = self.cache.block_tables.shape[1]
 
-            def fn(params, k_pages, v_pages, tokens, row, start, valid,
-                   temp, tk, tp, rseed):
+            def fn(params, k_pages, v_pages, ci, cf):
+                c = ci.shape[0] - mp - 4
+                row, tokens = ci[:mp], ci[mp:mp + c]
+                start, valid = ci[mp + c], ci[mp + c + 1]
                 with self._tp_ctx():
                     pages, logits = self.model.prefill_chunk(
                         params, {"k": k_pages, "v": v_pages}, row, tokens,
                         start, valid,
                     )
                     tok = sample_tokens(
-                        logits[None], temp[None], tk[None], tp[None],
-                        rseed[None], jnp.zeros((1,), jnp.int32),
-                        self.cfg.vocab_size,
+                        logits[None], cf[0][None], ci[mp + c + 2][None],
+                        cf[1][None], ci[mp + c + 3][None],
+                        jnp.zeros((1,), jnp.int32), self.cfg.vocab_size,
                     )
                 return pages["k"], pages["v"], tok[0]
 
             smapped = self._smap(
                 fn,
                 in_specs=(self.param_specs, PAGE_SPEC, PAGE_SPEC)
-                + (P(),) * 8,
+                + (P(),) * 2,
                 out_specs=(PAGE_SPEC, PAGE_SPEC, P()),
             )
             self._chunk_fn = jax.jit(smapped, donate_argnums=(1, 2))
@@ -358,16 +500,9 @@ class ModelExecutor:
     def prefill_chunk(self, work: PrefillChunk) -> int:
         """Dispatch one chunk; returns the sampled first token (meaningful
         only when this was the prompt's final chunk)."""
-        sp = work.seq.request.sampling
+        ci, cf = self._pack_chunk(work)
         k_pages, v_pages, tok = self._chunk_prefill_fn()(
-            self.params, self.cache.k_pages, self.cache.v_pages,
-            jnp.asarray(work.tokens), self.cache.device_row(work.slot),
-            jnp.asarray(work.start, jnp.int32),
-            jnp.asarray(work.valid, jnp.int32),
-            jnp.asarray(sp.temperature, jnp.float32),
-            jnp.asarray(sp.top_k, jnp.int32),
-            jnp.asarray(sp.top_p, jnp.float32),
-            jnp.asarray(work.seq.handle.seed, jnp.int32),
+            self.params, self.cache.k_pages, self.cache.v_pages, ci, cf
         )
         self.cache.set_pages(k_pages, v_pages)
         return int(tok)

@@ -14,6 +14,12 @@ percentile/format logic used by ``launch/serve.py`` and
   can't: is the decode batch actually full (occupancy), and is throughput
   page-bound or slot-bound (page utilization vs occupancy)?
   ``launch/serve.py`` prints both in its stats output.
+* **Per-dispatch batch composition** (``record_batch``) — how each device
+  dispatch divides its rows between decode, live prefill and padding, and
+  what fraction of dispatches were fused (decode + chunk in one call).
+  This is the observability knob for the fused mixed step: a low fused
+  fraction under mixed load means the scheduler is starving one side;
+  high padding means ``max_slots`` is oversized for the offered load.
 """
 
 from __future__ import annotations
@@ -33,6 +39,12 @@ class UtilizationMetrics:
     def __init__(self):
         self.slot_samples: list[float] = []   # decoding / total slots
         self.page_samples: list[float] = []   # pages in use / usable pages
+        # per-dispatch batch composition (fused mixed step observability)
+        self.dispatches = 0
+        self.fused_dispatches = 0
+        self.decode_rows = 0
+        self.prefill_rows = 0
+        self.padded_rows = 0
 
     def record(self, *, active: int, slots: int,
                pages_used: int | None = None,
@@ -41,39 +53,69 @@ class UtilizationMetrics:
         if pages_total:
             self.page_samples.append(pages_used / pages_total)
 
+    def record_batch(self, *, decode_rows: int, prefill_rows: int,
+                     padded_rows: int, fused: bool) -> None:
+        """Record one device dispatch's row composition. ``fused`` marks a
+        mixed dispatch (decode slots + a prefill chunk in one call)."""
+        self.dispatches += 1
+        self.fused_dispatches += int(fused)
+        self.decode_rows += decode_rows
+        self.prefill_rows += prefill_rows
+        self.padded_rows += padded_rows
+
     def merge(self, other: "UtilizationMetrics") -> None:
         self.slot_samples.extend(other.slot_samples)
         self.page_samples.extend(other.page_samples)
+        self.dispatches += other.dispatches
+        self.fused_dispatches += other.fused_dispatches
+        self.decode_rows += other.decode_rows
+        self.prefill_rows += other.prefill_rows
+        self.padded_rows += other.padded_rows
 
     @property
     def steps(self) -> int:
         return len(self.slot_samples)
 
     def summary(self) -> dict | None:
-        """Mean/peak slot occupancy and page utilization (fractions), or
-        None when no decode step was recorded."""
-        if not self.slot_samples:
+        """Mean/peak slot occupancy, page utilization (fractions) and
+        dispatch composition, or None when nothing was recorded."""
+        if not self.slot_samples and not self.dispatches:
             return None
-        out = {
-            "decode_steps": len(self.slot_samples),
-            "slot_occupancy_mean": float(np.mean(self.slot_samples)),
-            "slot_occupancy_peak": float(np.max(self.slot_samples)),
-        }
+        out = {"decode_steps": len(self.slot_samples)}
+        if self.slot_samples:
+            out["slot_occupancy_mean"] = float(np.mean(self.slot_samples))
+            out["slot_occupancy_peak"] = float(np.max(self.slot_samples))
         if self.page_samples:
             out["page_util_mean"] = float(np.mean(self.page_samples))
             out["page_util_peak"] = float(np.max(self.page_samples))
+        if self.dispatches:
+            rows = self.decode_rows + self.prefill_rows + self.padded_rows
+            out["dispatches"] = self.dispatches
+            out["fused_step_fraction"] = self.fused_dispatches / self.dispatches
+            out["decode_rows"] = self.decode_rows
+            out["prefill_rows"] = self.prefill_rows
+            out["padded_rows"] = self.padded_rows
+            out["padded_row_fraction"] = self.padded_rows / max(rows, 1)
         return out
 
     def format(self) -> str:
         s = self.summary()
         if s is None:
             return "no_utilization_data"
-        txt = (f"slot_occupancy_mean={s['slot_occupancy_mean']:.0%}/"
-               f"peak={s['slot_occupancy_peak']:.0%}")
+        txt = "slot_occupancy_mean=n/a"
+        if "slot_occupancy_mean" in s:
+            txt = (f"slot_occupancy_mean={s['slot_occupancy_mean']:.0%}/"
+                   f"peak={s['slot_occupancy_peak']:.0%}")
         if "page_util_mean" in s:
             txt += (f";page_util_mean={s['page_util_mean']:.0%}/"
                     f"peak={s['page_util_peak']:.0%}")
-        return f"{txt};decode_steps={s['decode_steps']}"
+        txt += f";decode_steps={s['decode_steps']}"
+        if "dispatches" in s:
+            txt += (f";dispatches={s['dispatches']}"
+                    f";fused_frac={s['fused_step_fraction']:.0%}"
+                    f";rows=d{s['decode_rows']}/p{s['prefill_rows']}"
+                    f"/pad{s['padded_rows']}")
+        return txt
 
 
 def latency_percentiles(results) -> dict | None:

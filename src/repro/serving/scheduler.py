@@ -36,6 +36,7 @@ __all__ = [
     "PrefillChunk",
     "Scheduler",
     "Sequence",
+    "StepPlan",
 ]
 
 
@@ -83,6 +84,28 @@ class DecodeInputs:
     greedy_only: bool = True
 
 
+@dataclass
+class StepPlan:
+    """Everything one fused engine step dispatches: the decode batch plus at
+    most one token-budgeted prefill chunk, all with static padded shapes
+    (``decode`` is always the full S-slot batch, ``chunk`` always C padded
+    tokens), so the executor's fused function never recompiles.
+
+    ``decode_slots`` captures the decoding slots at plan time — the engine
+    harvests exactly these after the dispatch, so a sequence that becomes
+    decodable mid-step (the chunk finishing its prompt) is never harvested
+    from a dispatch it was not part of. ``decode`` is None when the device
+    mirrors are already current (the steady-state zero-transfer path).
+    ``step_tokens`` is the plan's token-budget spend: one per decode row
+    plus the chunk's valid tokens.
+    """
+
+    decode_slots: list[int]
+    decode: DecodeInputs | None
+    chunk: PrefillChunk | None
+    step_tokens: int
+
+
 class Scheduler:
     """Pure-host scheduler over a :class:`PagedKVCache`'s bookkeeping.
 
@@ -99,15 +122,46 @@ class Scheduler:
         chunked: bool,
         prefix_sharing: bool,
         extra_ctx: int = 0,
+        token_budget: int | None = None,
     ):
         self.cache = cache
         self.prefill_chunk = prefill_chunk
         self.chunked = chunked
         self.prefix_sharing = prefix_sharing and chunked
         self.extra_ctx = extra_ctx  # non-token context (vlm frontend tokens)
+        # Sarathi-style cap on tokens per fused step (decode rows + chunk
+        # valid); None = uncapped. Only build_step_plan applies it — the
+        # interleaved A/B path is unaffected.
+        self.token_budget = token_budget
         self.slots: dict[int, Sequence] = {}
-        self.dirty = True  # decode-batch composition changed since last build
         self._admit_counter = 0
+        # persistent decode-batch mirrors: build_decode_inputs refreshes
+        # only the slots marked dirty since the last build, so host-side
+        # per-step assembly stops scaling with max_slots
+        n, mp = cache.block_tables.shape
+        self._mir_tokens = np.zeros((n, 1), np.int32)
+        self._mir_temps = np.zeros((n,), np.float32)
+        self._mir_tks = np.zeros((n,), np.int32)
+        self._mir_tps = np.ones((n,), np.float32)
+        self._mir_seeds = np.zeros((n,), np.int32)
+        self._mir_idx = np.zeros((n,), np.int32)
+        self._mir_active = np.zeros((n,), np.int32)
+        self._mir_bt = np.full((n, mp), NULL_PAGE, np.int32)
+        self._mir_lens = np.zeros((n,), np.int32)
+        self._dirty_slots: set[int] = set()
+        self._all_dirty = True  # composition changed since last build
+
+    @property
+    def dirty(self) -> bool:
+        """True when the decode batch must be (re)built before dispatching
+        (composition changed: admission, begin/end of decode, eviction,
+        block-table growth/COW). Length/token advances from decoded tokens
+        do NOT dirty the batch — the executor's jitted step advances its
+        device copies identically."""
+        return self._all_dirty or bool(self._dirty_slots)
+
+    def _mark(self, slot: int) -> None:
+        self._dirty_slots.add(slot)
 
     # ------------------------------------------------------------------
     # admission
@@ -162,16 +216,23 @@ class Scheduler:
             prefill_pos=cached,
         )
         self.slots[slot] = seq
-        self.dirty = True
+        self._mark(slot)
         return slot, seq, cached
 
     # ------------------------------------------------------------------
     # chunked prefill
     # ------------------------------------------------------------------
-    def next_prefill(self) -> PrefillChunk | None:
+    def next_prefill(self, limit: int | None = None,
+                     width: int | None = None) -> PrefillChunk | None:
         """The OLDEST in-flight prefill's next fixed-size chunk (the engine
         runs at most one per step so concurrent decodes stall for one
-        chunk's latency at worst), or None when nothing is prefilling."""
+        chunk's latency at worst), or None when nothing is prefilling.
+        ``limit`` caps the chunk's live tokens (the fused step's token
+        budget); a zero limit defers the chunk entirely this step.
+        ``width`` shrinks the chunk's STATIC buffer below
+        ``prefill_chunk`` — under a token budget the live tokens can never
+        exceed the budget, so padding the buffer past it would make every
+        fused dispatch pay compute for rows the mask kills."""
         cands = [(q.order, s) for s, q in self.slots.items()
                  if q.phase == "prefill"]
         if not cands:
@@ -180,8 +241,13 @@ class Scheduler:
         seq = self.slots[slot]
         prompt = seq.request.prompt
         start = seq.prefill_pos
-        c = self.prefill_chunk
+        c = self.prefill_chunk if width is None else min(
+            self.prefill_chunk, max(1, width))
         valid = min(c, len(prompt) - start)
+        if limit is not None:
+            valid = min(valid, limit)
+        if valid <= 0:
+            return None  # budget exhausted by decode rows: defer one step
         toks = np.zeros((c,), np.int32)
         toks[:valid] = prompt[start:start + valid]
         return PrefillChunk(slot, seq, toks, start, valid)
@@ -201,7 +267,7 @@ class Scheduler:
     def begin_decode(self, slot: int) -> None:
         """Prompt fully cached: the slot joins the decode batch."""
         self.slots[slot].phase = "decode"
-        self.dirty = True
+        self._mark(slot)
 
     # ------------------------------------------------------------------
     # lifecycle
@@ -216,7 +282,7 @@ class Scheduler:
         """Free a finished/cancelled sequence's slot and pages."""
         seq = self.slots.pop(slot)
         self.cache.release(slot)
-        self.dirty = True
+        self._mark(slot)
         return seq
 
     def has_decodable(self) -> bool:
@@ -251,7 +317,7 @@ class Scheduler:
             while slot in self.slots:
                 try:
                     if self.cache.ensure_append_capacity(slot):
-                        self.dirty = True
+                        self._mark(slot)  # table grew or a page was COWed
                     break
                 except RuntimeError:
                     preempted.append(self.evict_youngest()[1])
@@ -260,43 +326,104 @@ class Scheduler:
     # ------------------------------------------------------------------
     # decode-batch assembly
     # ------------------------------------------------------------------
+    def append_decoded(self, slot: int, token: int) -> None:
+        """Record one sampled token for a decoding slot (both step modes'
+        harvest path): advance the cache length and the attempt's token
+        list, and keep the persistent mirrors current WITHOUT dirtying the
+        batch — the executor's jitted step advanced its device copies
+        (token, length, sample index) identically, so no re-upload is
+        needed."""
+        seq = self.slots[slot]
+        self.cache.append(slot)
+        seq.tokens.append(token)
+        self._mir_tokens[slot, 0] = token
+        self._mir_idx[slot] = len(seq.tokens)
+        self._mir_lens[slot] = self.cache.lengths[slot]
+
+    def _refresh_slot(self, slot: int) -> None:
+        """Bring one slot's mirror row up to date with host truth."""
+        seq = self.slots.get(slot)
+        if seq is None or seq.phase != "decode":
+            # idle or prefilling: mask to the null page / length 0 so the
+            # decode write lands in the sink and the (discarded) attention
+            # output reads nothing
+            self._mir_active[slot] = 0
+            self._mir_bt[slot] = NULL_PAGE
+            self._mir_lens[slot] = 0
+            self._mir_tokens[slot, 0] = 0
+            self._mir_temps[slot] = 0.0
+            self._mir_tks[slot] = 0
+            self._mir_tps[slot] = 1.0
+            self._mir_seeds[slot] = 0
+            self._mir_idx[slot] = 0
+            return
+        sp = seq.request.sampling
+        self._mir_active[slot] = 1
+        self._mir_bt[slot] = self.cache.block_tables[slot]
+        self._mir_lens[slot] = self.cache.lengths[slot]
+        self._mir_tokens[slot, 0] = seq.tokens[-1]
+        self._mir_temps[slot] = sp.temperature
+        self._mir_tks[slot] = sp.top_k
+        self._mir_tps[slot] = sp.top_p
+        self._mir_seeds[slot] = seq.handle.seed
+        self._mir_idx[slot] = len(seq.tokens)
+
     def build_decode_inputs(self) -> DecodeInputs:
-        """Assemble the fixed-width decode batch from host state. Slots that
-        are idle or still prefilling are masked to the null page / length 0
-        so the decode write lands in the sink and their (discarded)
-        attention output reads nothing. Fresh copies throughout — the cache
-        tables mutate between steps and the executor transfers these
-        asynchronously."""
-        n = self.cache.max_slots
-        tokens = np.zeros((n, 1), np.int32)
-        temps = np.zeros((n,), np.float32)
-        top_ks = np.zeros((n,), np.int32)
-        top_ps = np.ones((n,), np.float32)
-        seeds = np.zeros((n,), np.int32)
-        idx = np.zeros((n,), np.int32)
-        active = np.zeros((n,), np.int32)
-        bt = self.cache.block_tables.copy()
-        lens = self.cache.lengths.copy()
-        live = np.zeros((n,), bool)
-        greedy = True
-        for slot, seq in self.slots.items():
-            if seq.phase != "decode":
-                continue
-            live[slot] = True
-            tokens[slot, 0] = seq.tokens[-1]
-            sp = seq.request.sampling
-            temps[slot] = sp.temperature
-            top_ks[slot] = sp.top_k
-            top_ps[slot] = sp.top_p
-            seeds[slot] = seq.handle.seed
-            idx[slot] = len(seq.tokens)
-            active[slot] = 1
-            greedy = greedy and sp.temperature <= 0.0
-        bt[~live] = NULL_PAGE
-        lens[~live] = 0
-        self.dirty = False
-        return DecodeInputs(tokens, temps, top_ks, top_ps, seeds, idx,
-                            active, bt, lens, greedy_only=greedy)
+        """Assemble the fixed-width decode batch from the persistent
+        mirrors, refreshing only the slots dirtied since the last build —
+        host-side per-step overhead tracks the number of lifecycle events,
+        not max_slots. Fresh copies on return — the cache tables mutate
+        between steps and the executor transfers these asynchronously."""
+        if self._all_dirty:
+            for slot in range(self.cache.max_slots):
+                self._refresh_slot(slot)
+        else:
+            for slot in self._dirty_slots:
+                self._refresh_slot(slot)
+        self._dirty_slots.clear()
+        self._all_dirty = False
+        act = self._mir_active.astype(bool)
+        greedy = bool((self._mir_temps[act] <= 0.0).all())
+        return DecodeInputs(
+            self._mir_tokens.copy(), self._mir_temps.copy(),
+            self._mir_tks.copy(), self._mir_tps.copy(),
+            self._mir_seeds.copy(), self._mir_idx.copy(),
+            self._mir_active.copy(), self._mir_bt.copy(),
+            self._mir_lens.copy(), greedy_only=greedy,
+        )
+
+    # ------------------------------------------------------------------
+    # fused step plan
+    # ------------------------------------------------------------------
+    def build_step_plan(self) -> StepPlan:
+        """Assemble ONE fused step: the full decode batch plus at most one
+        prefill chunk, under the token budget (one token per decode row;
+        the chunk's live tokens fill what remains — Sarathi-style, so an
+        operator can trade TTFT for ITL tail). With no decode rows in
+        flight the budget is waived (a chunk always makes progress; cold
+        start cannot stall). ``decode`` is None on the steady-state path
+        (device mirrors current); shapes are static either way."""
+        decode_slots = [s for s, q in sorted(self.slots.items())
+                        if q.phase == "decode"]
+        limit = width = None
+        if self.token_budget is not None and decode_slots:
+            # The chunk buffer is sized to what the budget can actually
+            # spend AFTER the decode rows take their token each — not the
+            # full budget — so a chunky step never carries buffer rows the
+            # mask is guaranteed to kill. Widths vary with the decode
+            # count, so the executor compiles at most max_slots chunk
+            # shapes (once each, during warmup).
+            limit = width = max(0, self.token_budget - len(decode_slots))
+        chunk = (self.next_prefill(limit=limit, width=width)
+                 if self.chunked else None)
+        decode = (self.build_decode_inputs()
+                  if decode_slots and self.dirty else None)
+        return StepPlan(
+            decode_slots=decode_slots,
+            decode=decode,
+            chunk=chunk,
+            step_tokens=len(decode_slots) + (chunk.valid if chunk else 0),
+        )
 
     # ------------------------------------------------------------------
     # gauges

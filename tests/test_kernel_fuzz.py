@@ -281,6 +281,132 @@ def test_paged_decode_equals_prefill_c1():
 
 
 # ---------------------------------------------------------------------------
+# mixed prefill+decode paged attention (the fused engine step's kernel)
+# ---------------------------------------------------------------------------
+# params: (r, h, kvh, d, page, mp, n_dead, chunk_rows)
+#   every row is ONE query position with its own (block_table, last_pos);
+#   n_dead rows get last_pos=-1 (padding/idle — exact-zero output), the
+#   last chunk_rows rows share one block table with consecutive last_pos
+#   (a prefill chunk laid out as independent rows)
+
+
+def _mixed_sweep():
+    cases = [
+        (1, 4, 2, 16, 8, 1, 0, 0),     # lone decode row
+        (3, 4, 2, 16, 8, 4, 1, 0),     # decode batch with a dead row
+        (4, 8, 1, 8, 16, 2, 0, 4),     # pure chunk, MQA
+        (6, 4, 4, 32, 4, 2, 1, 3),     # the fused mix: decode+dead+chunk
+        (5, 4, 2, 16, 8, 3, 4, 0),     # almost everything dead
+    ]
+    rng = np.random.default_rng(0x313DED)
+    for _ in range(16):
+        kvh = int(rng.choice([1, 2, 4]))
+        r = int(rng.integers(1, 9))
+        page = int(rng.choice([4, 8, 16]))
+        mp = int(rng.integers(1, 5))
+        ck = min(int(rng.integers(0, r + 1)), mp * page)
+        cases.append((
+            r, kvh * int(rng.choice([1, 2, 4])), kvh,
+            int(rng.choice([8, 16, 32])), page, mp,
+            int(rng.integers(0, r - ck + 1)), ck,
+        ))
+    return cases
+
+
+def _mixed_case(params, seed):
+    r, h, kvh, d, page, mp, n_dead, ck = params
+    rng = np.random.default_rng(seed)
+    num_pages = r * mp + 2
+    q = jnp.asarray(rng.standard_normal((r, h, d)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((num_pages, page, kvh, d)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((num_pages, page, kvh, d)), jnp.float32)
+    last = rng.integers(0, mp * page, r).astype(np.int32)
+    bt = np.full((r, mp), NULL_PAGE, np.int32)
+    nxt = 1
+    for i in range(r - ck):
+        for p in range(cdiv(int(last[i]) + 1, page)):
+            bt[i, p] = nxt
+            nxt += 1
+    if ck:
+        # chunk rows: one shared table, consecutive positions ending mid-page
+        # (start clamped so the run fits the mp-page table)
+        start = int(rng.integers(0, max(mp * page - ck, 1)))
+        last[r - ck:] = start + np.arange(ck)
+        pages = cdiv(start + ck, page)
+        bt[r - ck:, :pages] = np.arange(nxt, nxt + pages)
+    order = rng.permutation(r - ck)  # dead rows anywhere among the decodes
+    last[order[:n_dead]] = -1
+    return q, kp, vp, jnp.asarray(bt), jnp.asarray(last)
+
+
+@pytest.mark.parametrize("params", _mixed_sweep(),
+                         ids=lambda p: "r{}h{}k{}d{}p{}m{}x{}c{}".format(*p))
+def test_paged_mixed_kernel_vs_oracle(params):
+    for seed in (0, 1):
+        q, kp, vp, bt, last = _mixed_case(params, seed)
+        want = ops.paged_mixed_attention(q, kp, vp, bt, last,
+                                         impl="xla_chunked")
+        got = ops.paged_mixed_attention(q, kp, vp, bt, last,
+                                        impl="pallas_interpret")
+        _assert_close(got, want, params + (seed,), "paged_mixed")
+        dead = np.asarray(last) < 0
+        assert (np.asarray(got)[dead] == 0).all(), (
+            f"dead rows must be exact zeros at {params}")
+
+
+def test_paged_mixed_subsumes_decode_and_chunk():
+    """Cross-kernel consistency: with last_pos = lengths - 1 the mixed
+    kernel IS paged decode, and a run of consecutive last_pos over a shared
+    table IS the chunk-prefill kernel — the two dispatches the fused engine
+    step replaces."""
+    params = (4, 4, 2, 16, 8, 3, 1, 0)
+    q, kp, vp, bt, last = _mixed_case(params, seed=3)
+    lens = jnp.asarray(np.maximum(np.asarray(last) + 1, 0))
+    dec = ops.paged_attention(q, kp, vp, bt, lens, impl="pallas_interpret")
+    mix = ops.paged_mixed_attention(q, kp, vp, bt, last,
+                                    impl="pallas_interpret")
+    _assert_close(mix, dec, params, "mixed_vs_decode")
+
+    c, start, h, kvh, d, page = 8, 5, 4, 2, 16, 8
+    cp = (c, start, c, h, kvh, d, page, 1)
+    qc, kpc, vpc, btc, s_, v_ = _prefill_case(cp, seed=7)
+    chunk = ops.paged_prefill_attention(qc, kpc, vpc, btc, s_, v_,
+                                        impl="pallas_interpret")
+    mixc = ops.paged_mixed_attention(
+        qc, kpc, vpc, jnp.broadcast_to(btc, (c,) + btc.shape),
+        jnp.int32(start) + jnp.arange(c, dtype=jnp.int32),
+        impl="pallas_interpret",
+    )
+    _assert_close(mixc, chunk, cp, "mixed_vs_chunk")
+
+
+def test_paged_mixed_structured_xla_matches_oracle():
+    """The ``num_decode`` structure hint must not change results: the split
+    XLA fallback (decode rows through the decode ref, chunk rows through
+    ONE shared-table prefill gather) equals the generic per-row oracle,
+    with dead rows — idle decode slots AND chunk padding suffixes — still
+    exact zeros."""
+    for params, dead_tail in (((7, 4, 2, 16, 8, 3, 1, 4), 2),
+                              ((6, 8, 1, 8, 16, 2, 0, 3), 0),
+                              ((5, 4, 4, 32, 4, 2, 1, 2), 2)):
+        q, kp, vp, bt, last = _mixed_case(params, seed=11)
+        r, ck = params[0], params[7]
+        last = np.asarray(last).copy()
+        if dead_tail:
+            last[r - dead_tail:] = -1  # chunk padding: a dead suffix
+        last = jnp.asarray(last)
+        want = ops.paged_mixed_attention(q, kp, vp, bt, last,
+                                         impl="xla_chunked")
+        got = ops.paged_mixed_attention(q, kp, vp, bt, last,
+                                        impl="xla_chunked",
+                                        num_decode=r - ck)
+        _assert_close(got, want, params + (dead_tail,), "mixed_structured")
+        dead = np.asarray(last) < 0
+        assert (np.asarray(got)[dead] == 0).all(), (
+            f"dead rows must be exact zeros at {params}")
+
+
+# ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------
 

@@ -193,3 +193,175 @@ def test_straggler_hedging(tmp_path):
     kinds = [e["kind"] for e in sched.events.history()]
     assert kinds.count("pod_hedged") == 1
     assert kinds.count("step_done") == 1
+
+
+# ---------------------------------------------------------------------------
+# serving StepPlan: the fused engine step's host-side plan
+# ---------------------------------------------------------------------------
+
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving import PagedKVCache, Request, RequestHandle
+from repro.serving.kv_cache import NULL_PAGE
+from repro.serving.scheduler import Scheduler, StepPlan
+
+
+def _cache(**kw):
+    args = dict(num_layers=1, num_kv_heads=1, head_dim=4, dtype=jnp.float32,
+                max_slots=3, max_context=64, page_size=8)
+    args.update(kw)
+    return PagedKVCache(**args)
+
+
+def _sched(cache, **kw):
+    args = dict(prefill_chunk=8, chunked=True, prefix_sharing=True)
+    args.update(kw)
+    return Scheduler(cache, **args)
+
+
+def _req(uid, prompt, **kw):
+    r = Request(uid, prompt, **kw)
+    return r, RequestHandle(r)
+
+
+def _start_decode(sched, uid, prompt, first_tok=7):
+    """Place + fully prefill one request so its slot is decodable."""
+    slot, seq, _ = sched.place(*_req(uid, prompt))
+    while True:
+        work = sched.next_prefill()
+        assert work.slot == slot
+        if sched.complete_chunk(work):
+            break
+    seq.tokens.append(first_tok)
+    sched.begin_decode(slot)
+    return slot, seq
+
+
+def test_step_plan_degenerate_shapes():
+    """Empty scheduler -> empty plan; prefill-only -> chunk-only plan;
+    decode-only -> no chunk; step_tokens accounts both parts."""
+    sched = _sched(_cache())
+    plan = sched.build_step_plan()
+    assert isinstance(plan, StepPlan)
+    assert plan.decode_slots == [] and plan.decode is None
+    assert plan.chunk is None and plan.step_tokens == 0
+
+    # prefill-only: the plan carries the chunk, no decode batch
+    sched.place(*_req("p", list(range(1, 13))))
+    plan = sched.build_step_plan()
+    assert plan.decode_slots == [] and plan.decode is None
+    assert plan.chunk is not None and plan.chunk.valid == 8
+    assert plan.step_tokens == 8
+
+    # decode-only: complete the prefill; no chunk remains
+    sched.complete_chunk(sched.next_prefill())
+    sched.complete_chunk(sched.next_prefill())
+    slot = plan.chunk.slot
+    sched.slots[slot].tokens.append(3)
+    sched.begin_decode(slot)
+    plan = sched.build_step_plan()
+    assert plan.decode_slots == [slot] and plan.chunk is None
+    assert plan.step_tokens == 1
+    assert plan.decode is not None  # composition changed -> batch rebuilt
+
+
+def test_step_plan_token_budget_accounting():
+    """The chunk's live tokens fill budget - decode_rows; a budget already
+    spent by decode rows defers the chunk; no decode rows waives the cap."""
+    cache = _cache(max_slots=3, num_pages=32)
+    sched = _sched(cache, token_budget=6)
+    s0, _ = _start_decode(sched, "d0", list(range(1, 7)))
+    s1, _ = _start_decode(sched, "d1", list(range(20, 26)))
+    sched.place(*_req("p", list(range(40, 52))))  # 12 tokens to prefill
+
+    plan = sched.build_step_plan()
+    assert plan.decode_slots == sorted([s0, s1])
+    assert plan.chunk is not None
+    assert plan.chunk.valid == 4           # 6 budget - 2 decode rows
+    assert plan.step_tokens == 6
+    # under a budget the STATIC buffer shrinks to budget - decode_rows:
+    # the live tokens can never exceed that, so a wider buffer would only
+    # add masked-dead compute to every fused dispatch
+    assert plan.chunk.tokens.shape == (4,)
+    assert plan.chunk.valid == plan.chunk.tokens.shape[0]
+    sched.complete_chunk(plan.chunk)
+
+    # budget <= decode rows: the chunk is deferred, decode still runs
+    sched.token_budget = 2
+    plan = sched.build_step_plan()
+    assert plan.chunk is None
+    assert plan.step_tokens == 2
+
+    # no decode rows in flight: the budget is waived (progress guarantee)
+    for s in list(plan.decode_slots):
+        sched.release(s)
+    plan = sched.build_step_plan()
+    assert plan.decode_slots == []
+    assert plan.chunk is not None and plan.chunk.valid == 8
+    assert plan.step_tokens == 8
+
+
+def test_step_plan_preemption_mid_chunk():
+    """A sequence preempted mid-prefill vanishes from the next plan: its
+    chunk is not dispatched and its slot is not harvested."""
+    cache = _cache(num_pages=5, max_slots=3)  # 4 usable pages
+    sched = _sched(cache, prefix_sharing=False)
+    s0, seq0 = _start_decode(sched, "old", list(range(1, 16)))  # 2 pages
+    # the youngest sequence is mid-prefill when the pool runs dry
+    sched.place(*_req("young", [90 + i for i in range(15)]))
+    assert sched.next_prefill() is not None
+    cache.lengths[s0] = 16  # next decode write needs a 3rd page: none free
+    preempted = sched.ensure_decode_capacity()
+    assert [s.request.uid for s in preempted] == ["young"]
+
+    plan = sched.build_step_plan()
+    assert plan.chunk is None              # the mid-chunk prefill is gone
+    assert plan.decode_slots == [s0]
+    assert plan.decode is not None         # eviction dirtied the batch
+    assert plan.decode.active[s0] == 1
+
+
+def test_step_plan_static_shapes_and_mirror_reuse():
+    """Decode batches keep (max_slots,)-static shapes across steps, clean
+    steady-state plans skip the rebuild (decode=None), and append_decoded
+    keeps the mirrors current without dirtying."""
+    cache = _cache(max_slots=3, num_pages=32)
+    sched = _sched(cache)
+    s0, seq0 = _start_decode(sched, "a", list(range(1, 7)))
+    plan1 = sched.build_step_plan()
+    d = plan1.decode
+    assert d.tokens.shape == (3, 1) and d.active.shape == (3,)
+    assert d.block_tables.shape == cache.block_tables.shape
+    assert d.active[s0] == 1 and d.lengths[s0] == cache.lengths[s0]
+    idle = [s for s in range(3) if s != s0]
+    assert (d.block_tables[idle] == NULL_PAGE).all()
+    assert sched.dirty is False
+
+    # harvest: mirrors advance in lockstep with the device, still clean
+    sched.append_decoded(s0, 42)
+    assert sched.dirty is False
+    plan2 = sched.build_step_plan()
+    assert plan2.decode is None            # zero-transfer steady state
+    assert plan2.decode_slots == [s0] and plan2.step_tokens == 1
+    assert sched._mir_tokens[s0, 0] == 42
+    assert sched._mir_idx[s0] == len(seq0.tokens)
+    assert sched._mir_lens[s0] == cache.lengths[s0]
+
+    # a composition change re-dirties and the rebuilt batch matches a
+    # from-scratch refresh of every slot
+    s1, _ = _start_decode(sched, "b", list(range(30, 37)), first_tok=9)
+    plan3 = sched.build_step_plan()
+    assert plan3.decode is not None
+    fresh = Scheduler(cache, prefill_chunk=8, chunked=True,
+                      prefix_sharing=True)
+    fresh.slots = sched.slots
+    rebuilt = fresh.build_decode_inputs()
+    for a, b in zip(
+        (plan3.decode.tokens, plan3.decode.active, plan3.decode.lengths,
+         plan3.decode.block_tables, plan3.decode.idx),
+        (rebuilt.tokens, rebuilt.active, rebuilt.lengths,
+         rebuilt.block_tables, rebuilt.idx),
+    ):
+        np.testing.assert_array_equal(a, b)
