@@ -585,6 +585,126 @@ def bench_serving_prefill_heavy(quick: bool):
                             / np.median([x.ttft for x in ref_res])), 3))
 
 
+def bench_fleet_recovery(quick: bool):
+    """Fault-tolerance cost on the supervised serving fleet: the same trace
+    served by a 2-worker FleetSupervisor with 0 vs 1 injected worker crash
+    per run (alternated best-of-3). Reports delivered tok/s, client-
+    observed p99 inter-token latency (bus delta timestamps — the crash gap
+    lands in the ITL tail, which is exactly where a client would feel it),
+    and the recovery latency (crash detected -> first token delivered past
+    the crash boundary). The 1-crash run must still complete every request
+    — crash-replay recovery is correctness here, the bench prices it."""
+    import jax
+
+    from repro.configs import ARCHS, reduced
+    from repro.core import TopicBus
+    from repro.core.faults import FaultInjector, WorkerKillRule
+    from repro.models import build_model
+    from repro.serving import ContinuousBatchingEngine, FleetConfig, FleetSupervisor
+
+    cfg = reduced(ARCHS["smollm-360m"])
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+
+    rng = np.random.default_rng(3)
+    n = 6 if quick else 12
+    max_new = 12
+    payloads = [
+        {"uid": f"f{i}",
+         "prompt": [int(x) for x in
+                    rng.integers(1, cfg.vocab_size, int(rng.integers(12, 33)))],
+         "max_new_tokens": max_new,
+         "temperature": 0.7 if i % 3 == 0 else 0.0,
+         "seed": 100 + i}
+        for i in range(n)
+    ]
+    uids = [p["uid"] for p in payloads]
+
+    def factory():
+        return ContinuousBatchingEngine(
+            cfg, params, max_len=64, max_slots=4, page_size=16,
+            prefill_chunk=16)
+
+    def bus_itls(bus) -> list[float]:
+        per: dict[str, list] = {}
+        for m in bus.read("responses"):
+            if m.value["event"] == "delta":
+                per.setdefault(m.value["uid"], []).append(
+                    (m.value["index"], m.ts))
+            # client-observed gaps, in delivered-index order
+        return [b - a for v in per.values()
+                for (_, a), (_, b) in zip(sorted(v), sorted(v)[1:])]
+
+    def one_run(crash: bool):
+        d = tempfile.mkdtemp()
+        try:
+            bus = TopicBus(Path(d) / "bus")
+            inj = FaultInjector(worker_rules=[
+                WorkerKillRule(after_tokens=2 * max_new, times=1)
+            ]) if crash else None
+            sup = FleetSupervisor(
+                bus, factory,
+                FleetConfig(workers=2, autoscale=False, beat_interval_s=0.05,
+                            max_restarts=2, seed_base=9),
+                injector=inj)
+            try:
+                for p in payloads:
+                    sup.submit(p)
+                t0 = time.perf_counter()
+                assert sup.run(expected=uids, timeout_s=300), \
+                    "fleet bench run did not drain"
+                wall = time.perf_counter() - t0
+            finally:
+                sup.shutdown()
+            states = sup.results()
+            delivered = sum(len(s.tokens) for s in states.values())
+            assert all(s.finish_reason in ("length", "stop")
+                       for s in states.values()), "request lost across crash"
+            if crash:
+                assert sup.metrics.crashes >= 1, "kill rule never fired"
+            return wall, delivered, bus_itls(bus), sup.metrics
+        finally:
+            shutil.rmtree(d, ignore_errors=True)
+
+    one_run(False)  # warm: worker engines compile once per process
+    rounds = 1 if quick else 3
+    best: dict[bool, tuple] = {}
+    for _ in range(rounds):  # alternated best-of, like the engine benches
+        for crash in (False, True):
+            r = one_run(crash)
+            if crash not in best or r[0] < best[crash][0]:
+                best[crash] = r
+
+    clean_w, clean_tok, clean_itls, _ = best[False]
+    crash_w, crash_tok, crash_itls, fm = best[True]
+    p99 = lambda xs: float(np.percentile(xs, 99) * 1e3) if xs else 0.0
+    rec = fm.recovery_s
+    row("serve_fleet_clean", clean_w * 1e6,
+        f"tok_per_s={clean_tok/clean_w:.1f};itl_ms_p99={p99(clean_itls):.1f}")
+    row("serve_fleet_1crash", crash_w * 1e6,
+        f"tok_per_s={crash_tok/crash_w:.1f};"
+        f"slowdown={crash_w/clean_w:.2f}x;"
+        f"recovery_s={max(rec) if rec else 0:.3f};"
+        f"itl_ms_p99={p99(crash_itls):.1f}")
+
+    SERVING["bench_fleet_recovery"] = {"config": {
+        "arch": cfg.name, "requests": n, "prompt_len": [12, 32],
+        "max_new": max_new, "workers": 2, "kill_after_tokens": 2 * max_new,
+        "best_of": rounds,
+    }}
+    serving_entry("bench_fleet_recovery", "fleet_clean",
+                  tok_per_s=clean_tok / clean_w,
+                  itl_ms_p99=round(p99(clean_itls), 2))
+    serving_entry("bench_fleet_recovery", "fleet_1crash",
+                  tok_per_s=crash_tok / crash_w,
+                  itl_ms_p99=round(p99(crash_itls), 2),
+                  slowdown_vs_clean=round(crash_w / clean_w, 2),
+                  crashes=fm.crashes, resubmitted=fm.resubmitted,
+                  duplicate_deltas_suppressed=fm.duplicate_deltas,
+                  recovery_s_mean=round(float(np.mean(rec)), 3) if rec else None,
+                  recovery_s_max=round(float(np.max(rec)), 3) if rec else None)
+
+
 def bench_kernels(quick: bool):
     """Pallas kernels (interpret mode) vs jnp reference — correctness + time."""
     import jax
@@ -685,7 +805,8 @@ def main() -> None:
     benches = (bench_split, bench_bus, bench_storage, bench_ckpt,
                bench_kernels, bench_recovery, bench_scaling, bench_step,
                bench_serving, bench_serving_shared_prefix,
-               bench_serving_prefill_heavy, bench_serving_low_load)
+               bench_serving_prefill_heavy, bench_serving_low_load,
+               bench_fleet_recovery)
     for bench in benches:
         if args.only and args.only not in bench.__name__:
             continue

@@ -44,6 +44,34 @@ class PodSpec:
     node_affinity: str | None = None  # set when a node-tier volume is claimed
 
 
+def serving_worker_spec(name: str, *, replicas: int = 2,
+                        liveness_interval_s: float = 2.0,
+                        readiness_timeout_s: float = 60.0,
+                        env: dict | None = None) -> PodSpec:
+    """PodSpec for one serving-engine worker deployment.
+
+    The serving fleet's workers are consumers of the supervisor's
+    ``fleet.work`` topic and producers on ``fleet.events``; readiness is
+    dominated by model load + XLA compile, so its timeout is much longer
+    than the liveness interval. The same spec drives both the in-process
+    :class:`repro.serving.fleet.FleetSupervisor` (restart parameters,
+    probe windows) and :func:`render_k8s_yaml` for the paper's Listing-1
+    Deployment."""
+    return PodSpec(
+        name=name,
+        image=f"{name}:latest",
+        role="both",
+        in_topics=["fleet.work", "fleet.control"],
+        out_topics=["fleet.events", "health"],
+        replicas=replicas,
+        resources=ResourceLimits(chips=1, hbm_gb=16.0,
+                                 cpu_limit="4", mem_limit="16Gi"),
+        env=dict(env or {}),
+        liveness_interval_s=liveness_interval_s,
+        readiness_timeout_s=readiness_timeout_s,
+    )
+
+
 def render_k8s_yaml(spec: PodSpec, kafka_broker: str = "my-broker-address",
                     tag: str = "latest") -> str:
     """The paper's Listing 1, filled in (indentation bugs of the paper fixed)."""

@@ -88,6 +88,19 @@ def main() -> int:
                          "on TPU and the XLA reference elsewhere; 'pallas' "
                          "on a non-TPU backend falls back to the reference "
                          "with a one-time warning")
+    ap.add_argument("--fleet", type=int, default=0, metavar="N",
+                    help="run the supervised fleet instead of the flat "
+                         "worker pool: a FleetSupervisor with N initial "
+                         "engine workers, heartbeat probes, crash-replay "
+                         "recovery and lag/occupancy autoscaling "
+                         "(serving/fleet.py); 0 keeps the legacy path")
+    ap.add_argument("--role", choices=["driver", "worker"], default="driver",
+                    help="'worker': run ONE fleet engine-worker loop against "
+                         "an existing --workdir bus (a supervisor elsewhere "
+                         "publishes fleet.work) and exit when the work topic "
+                         "drains — the multi-process deployment shape")
+    ap.add_argument("--worker-name", default="w0",
+                    help="--role worker: this worker's pod name")
     ap.add_argument("--workdir", default="experiments/serve_run")
     args = ap.parse_args()
 
@@ -141,16 +154,17 @@ def main() -> int:
 
     # ---- producer: enqueue requests (mixed sampling params, so the full
     # Request surface travels through the bus, not just uid/prompt) ----
-    for i in range(args.requests):
-        bus.publish(
-            "requests",
-            {"uid": f"r{i}",
-             "prompt": shared + [1 + (i % 30), 2, 3 + (i % 7)],
-             "max_new_tokens": args.max_new,
-             "temperature": 0.7 if i % 4 == 3 else 0.0,
-             "seed": i,
-             "priority": i % 3},
-        )
+    if args.role == "driver":
+        for i in range(args.requests):
+            bus.publish(
+                "requests",
+                {"uid": f"r{i}",
+                 "prompt": shared + [1 + (i % 30), 2, 3 + (i % 7)],
+                 "max_new_tokens": args.max_new,
+                 "temperature": 0.7 if i % 4 == 3 else 0.0,
+                 "seed": i,
+                 "priority": i % 3},
+            )
 
     group = "servers"
     scaler = Autoscaler(
@@ -177,6 +191,11 @@ def main() -> int:
             )
         return GenerationEngine(cfg, params, max_len=max_len,
                                 max_batch=args.max_batch, admission=admission)
+
+    if args.role == "worker":
+        return _run_worker(args, bus, make_engine)
+    if args.fleet:
+        return _run_fleet(args, bus, events, make_engine)
 
     done: dict[str, list[int]] = {}
     latencies: list = []  # Results, for TTFT/ITL percentiles
@@ -290,6 +309,79 @@ def main() -> int:
         "deltas must precede completion on the bus"
     print(f"streaming: {sum(len(t) for t in done.values())} deltas published "
           f"before {len(finish_at)} completions")
+    return 0
+
+
+def _run_fleet(args, bus, events, make_engine) -> int:
+    """Supervised-fleet driver: FleetSupervisor + N engine workers with
+    probes, crash-replay recovery and autoscaling (``serving/fleet.py``)."""
+    from repro.serving.fleet import FleetConfig, FleetSupervisor
+
+    fcfg = FleetConfig(
+        workers=args.fleet,
+        min_replicas=1,
+        max_replicas=max(args.fleet, 4),
+        target_lag_per_replica=args.max_batch * 2,
+    )
+    sup = FleetSupervisor(bus, make_engine, fcfg, events=events)
+    expected = [f"r{i}" for i in range(args.requests)]
+    t0 = time.time()
+    ok = sup.run(expected=expected, timeout_s=600)
+    wall = time.time() - t0
+    sup.shutdown()
+    states = sup.results()
+    n_tokens = sum(len(s.tokens) for s in states.values())
+    print(f"fleet served {len(states)}/{args.requests} requests in "
+          f"{wall:.1f}s ({n_tokens / wall:.1f} tok/s), "
+          f"workers={args.fleet}+auto, "
+          f"supervision: {sup.metrics.format()}")
+    autoscales = events.history("autoscale")
+    print("autoscale events:", [(e["old"], e["new"]) for e in autoscales])
+    assert ok, "fleet run timed out with requests still in flight"
+
+    # same streaming invariant as the flat pool: every streamed request's
+    # first delta precedes its terminal finish on the responses topic
+    first_delta: dict[str, int] = {}
+    finish_at: dict[str, int] = {}
+    for m in bus.read("responses"):
+        uid, event = m.value["uid"], m.value["event"]
+        if event == "delta":
+            first_delta.setdefault(uid, m.offset)
+        elif event == "finish":
+            finish_at[uid] = m.offset
+    streamed = [u for u, s in states.items() if s.tokens]
+    assert all(first_delta[u] < finish_at[u] for u in streamed), \
+        "deltas must precede completion on the bus"
+    print(f"streaming: {n_tokens} deltas published before "
+          f"{len(finish_at)} completions")
+    return 0
+
+
+def _run_worker(args, bus, make_engine) -> int:
+    """Standalone fleet worker: the multi-process deployment shape. A
+    supervisor in another process (same ``--workdir`` bus) publishes
+    ``fleet.work``; this process serves it until the topic drains."""
+    from repro.serving.fleet import (
+        EngineWorker,
+        FleetConfig,
+        WORK_TOPIC,
+        WORKER_GROUP,
+    )
+
+    w = EngineWorker(args.worker_name, 0, bus, make_engine,
+                     threading.Lock(), FleetConfig(workers=1, autoscale=False))
+    w.start()
+    idle_since = None
+    while w.thread.is_alive():
+        busy = bus.lag(WORK_TOPIC, WORKER_GROUP) > 0 or w.inflight
+        idle_since = None if busy else (idle_since or time.time())
+        if idle_since is not None and time.time() - idle_since > 2.0:
+            w.retire()
+            break
+        time.sleep(0.05)
+    w.thread.join(timeout=30)
+    print(f"worker {w.pod_id}: steps={w.steps_run} "
+          f"tokens={w.tokens_emitted} clean={w.stopped_cleanly}")
     return 0
 
 

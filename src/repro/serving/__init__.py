@@ -7,6 +7,9 @@
 micro-batching baseline; ``ContinuousBatchingEngine`` is the production path
 — continuous admission, chunked prefill interleaved with decode, and
 copy-on-write prefix sharing (see ``docs/serving.md`` for the full design).
+``repro.serving.fleet`` supervises N engine workers behind the bus —
+probes, crash-replay recovery, autoscaling (paper §3.5 fused with the
+serving arc).
 """
 
 from repro.serving.api import (
@@ -24,16 +27,26 @@ from repro.serving.api import (
     request_from_message,
 )
 from repro.serving.engine import ContinuousBatchingEngine, GenerationEngine
+from repro.serving.fleet import (
+    EngineWorker,
+    FleetConfig,
+    FleetSupervisor,
+    fleet_seed,
+)
 from repro.serving.kv_cache import PagedKVCache, PagePool
-from repro.serving.metrics import format_latency, latency_percentiles
+from repro.serving.metrics import FleetMetrics, format_latency, latency_percentiles
 
 __all__ = [
     "AdmissionPolicy",
     "ContinuousBatchingEngine",
     "DeadlineAdmission",
     "EngineCore",
+    "EngineWorker",
     "FIFOAdmission",
     "FinishReason",
+    "FleetConfig",
+    "FleetMetrics",
+    "FleetSupervisor",
     "GenerationEngine",
     "PagedKVCache",
     "PagePool",
@@ -43,6 +56,7 @@ __all__ = [
     "Result",
     "SamplingParams",
     "StreamEvent",
+    "fleet_seed",
     "format_latency",
     "latency_percentiles",
     "request_from_message",

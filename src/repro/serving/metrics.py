@@ -118,6 +118,59 @@ class UtilizationMetrics:
         return txt
 
 
+class FleetMetrics:
+    """Fleet-level supervision counters (``serving/fleet.py``).
+
+    Where :class:`UtilizationMetrics` answers "is one engine full", this
+    answers "what did fault tolerance cost": how many workers crashed or
+    were restarted, how many in-flight requests were resubmitted, how many
+    regenerated tokens the supervisor's index-dedupe suppressed (each one
+    a token a client would otherwise have seen twice), and the recovery
+    latency distribution (crash detected -> first token delivered past the
+    crash boundary). ``mismatched_deltas``/``gapped_deltas`` must stay 0 —
+    a nonzero count means a regenerated stream diverged from the original
+    or skipped an index, i.e. the replay-identical recovery contract broke.
+    """
+
+    def __init__(self):
+        self.crashes = 0            # workers that died or livelocked
+        self.restarts = 0           # replacement attempts spawned
+        self.resubmitted = 0        # in-flight requests replayed elsewhere
+        self.duplicate_deltas = 0   # regenerated tokens dropped by dedupe
+        self.mismatched_deltas = 0  # dup token != recorded token (MUST be 0)
+        self.gapped_deltas = 0      # delta index skipped ahead (MUST be 0)
+        self.direct_cancels = 0     # cancelled-during-crash finished by sup
+        self.recovery_s: list[float] = []  # crash -> first resumed token
+
+    def record_recovery(self, seconds: float) -> None:
+        self.recovery_s.append(seconds)
+
+    def summary(self) -> dict:
+        out = {
+            "crashes": self.crashes,
+            "restarts": self.restarts,
+            "resubmitted": self.resubmitted,
+            "duplicate_deltas": self.duplicate_deltas,
+            "mismatched_deltas": self.mismatched_deltas,
+            "gapped_deltas": self.gapped_deltas,
+            "direct_cancels": self.direct_cancels,
+        }
+        if self.recovery_s:
+            out["recovery_s_mean"] = float(np.mean(self.recovery_s))
+            out["recovery_s_max"] = float(np.max(self.recovery_s))
+        return out
+
+    def format(self) -> str:
+        s = self.summary()
+        txt = (f"crashes={s['crashes']};restarts={s['restarts']};"
+               f"resubmitted={s['resubmitted']};"
+               f"dedup={s['duplicate_deltas']}")
+        if self.recovery_s:
+            txt += (f";recovery_s_mean={s['recovery_s_mean']:.3f}"
+                    f"/max={s['recovery_s_max']:.3f}")
+        return txt
+
+
 def latency_percentiles(results) -> dict | None:
     """p50/p90/p99 TTFT and inter-token latency (ms) + max ITL (the decode
     stall bound). Returns None when no result carries latency data."""

@@ -1,0 +1,134 @@
+"""Units for the lag/occupancy autoscaler (``core/autoscaler.py``) with a
+fake clock: scale-up is immediate, scale-down waits out the grace window,
+an oscillating lag trace cannot thrash replicas, and the serving variant
+folds engine occupancy gauges into the decision."""
+
+import pytest
+
+from repro.core.autoscaler import (
+    Autoscaler,
+    AutoscalerConfig,
+    ServingAutoscaler,
+)
+from repro.core.bus import TopicBus
+from repro.core.events import EventLog
+
+TOPIC, GROUP = "work", "workers"
+
+
+@pytest.fixture
+def bus(tmp_path):
+    return TopicBus(tmp_path / "bus")
+
+
+def _set_lag(bus, n: int) -> None:
+    """Make the consumer group exactly n messages behind."""
+    end = bus.end_offset(TOPIC)
+    for _ in range(n - (end - bus.committed(TOPIC, GROUP))):
+        bus.publish(TOPIC, {"x": 1})
+    bus.commit(TOPIC, GROUP, bus.end_offset(TOPIC) - n)
+
+
+def _scaler(bus, clock, *, cls=Autoscaler, current=1, events=None, **cfg_kw):
+    cfg = AutoscalerConfig(min_replicas=1, max_replicas=4,
+                           target_lag_per_replica=2.0,
+                           scale_down_grace_s=5.0, **cfg_kw)
+    return cls(bus, TOPIC, GROUP, cfg, events=events, current=current,
+               clock=lambda: clock["t"])
+
+
+def test_scale_up_immediate_scale_down_after_grace(bus):
+    clock = {"t": 0.0}
+    sc = _scaler(bus, clock)
+
+    _set_lag(bus, 8)
+    assert sc.observe() == (4, True)  # ceil(8/2) = 4, no hysteresis upward
+    assert sc.current == 4
+
+    _set_lag(bus, 0)
+    clock["t"] = 1.0
+    assert sc.observe() == (4, False)  # wants 1, but grace not elapsed
+    clock["t"] = 4.0
+    assert sc.observe() == (4, False)
+    clock["t"] = 6.0
+    assert sc.observe() == (1, True)  # 6s since last scale event >= 5s grace
+    assert sc.current == 1
+
+
+def test_clamping(bus):
+    clock = {"t": 0.0}
+    sc = _scaler(bus, clock)
+    _set_lag(bus, 1000)
+    assert sc.desired_replicas() == 4  # max
+    _set_lag(bus, 0)
+    assert sc.desired_replicas() == 1  # min
+
+
+def test_no_thrash_on_oscillating_lag(bus):
+    """Lag alternating high/empty every second: replicas ride at the high
+    watermark — every 0-lag poll inside the grace window is a no-op, and
+    each high-lag poll resets the equal-state clock."""
+    clock = {"t": 0.0}
+    events = EventLog(bus, workflow="scaler-test")
+    sc = _scaler(bus, clock, events=events)
+    changes = []
+    for i in range(10):
+        clock["t"] = float(i)
+        _set_lag(bus, 8 if i % 2 == 0 else 0)
+        desired, changed = sc.observe()
+        if changed:
+            changes.append((i, desired))
+    assert changes == [(0, 4)], f"thrash: {changes}"
+    assert sc.current == 4
+    hist = events.history("autoscale")
+    assert len(hist) == 1 and (hist[0]["old"], hist[0]["new"]) == (1, 4)
+
+
+def test_scale_down_grace_measured_from_last_event(bus):
+    """A scale-up inside the wanted-lower period restarts the grace."""
+    clock = {"t": 0.0}
+    sc = _scaler(bus, clock)
+    _set_lag(bus, 8)
+    sc.observe()  # -> 4 at t=0
+    _set_lag(bus, 0)
+    clock["t"] = 4.0
+    assert sc.observe() == (4, False)
+    _set_lag(bus, 8)
+    clock["t"] = 4.5
+    assert sc.observe() == (4, False)  # equal: resets the grace clock
+    _set_lag(bus, 0)
+    clock["t"] = 8.0
+    assert sc.observe() == (4, False)  # only 3.5s since the reset
+    clock["t"] = 10.0
+    assert sc.observe() == (1, True)
+
+
+def test_serving_autoscaler_occupancy_bump(bus):
+    """Lag alone says 1 replica, but saturated slots with pending lag mean
+    the fleet is slot-bound: ask for one more than current."""
+    clock = {"t": 0.0}
+    gauges = {"slot_occupancy_mean": 0.0}
+    sc = _scaler(bus, clock, cls=ServingAutoscaler, current=2,
+                 target_occupancy=0.85)
+    sc.gauges = lambda: gauges
+
+    _set_lag(bus, 1)  # ceil(1/2) -> 1 replica by lag alone
+    assert sc.desired_replicas() == 1
+    gauges["slot_occupancy_mean"] = 0.95
+    assert sc.desired_replicas() == 3  # current + 1, occupancy-driven
+
+    _set_lag(bus, 0)  # saturated but nothing waiting: no bump
+    assert sc.desired_replicas() == 1
+
+    # the bump never exceeds max_replicas
+    sc.current = 4
+    _set_lag(bus, 1)
+    assert sc.desired_replicas() == 4
+
+
+def test_serving_autoscaler_gauge_term_optional(bus):
+    clock = {"t": 0.0}
+    sc = _scaler(bus, clock, cls=ServingAutoscaler, current=2)  # no target
+    sc.gauges = lambda: {"slot_occupancy_mean": 1.0}
+    _set_lag(bus, 1)
+    assert sc.desired_replicas() == 1  # target_occupancy=None disables it

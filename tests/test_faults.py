@@ -1,0 +1,105 @@
+"""Units for chaos-injection accounting (``core/faults.py``).
+
+The headline regression: ``_killed`` bookkeeping is hit concurrently from
+the scheduler thread, every serving worker, and timer threads — before the
+module-wide lock, two pods starting at once could both pass a ``times=1``
+rule's check and arm two kills. The threaded tests here race real threads
+through a barrier and pin exactly-once accounting.
+"""
+
+import threading
+from types import SimpleNamespace
+
+from repro.core.executor import KillSwitch
+from repro.core.faults import FaultInjector, KillRule, WorkerKillRule
+
+
+def _pod(step="s", attempt=0):
+    return SimpleNamespace(
+        image=SimpleNamespace(step=SimpleNamespace(name=step)),
+        attempt=attempt,
+        kill_switch=KillSwitch(),
+    )
+
+
+def test_on_pod_start_times_respected_under_races():
+    inj = FaultInjector(rules=[KillRule(step="s", after_s=60.0, times=1)])
+    n = 16
+    barrier = threading.Barrier(n)
+    results = [False] * n
+
+    def runner(i):
+        pod = _pod()
+        barrier.wait()
+        results[i] = inj.on_pod_start(pod)
+
+    threads = [threading.Thread(target=runner, args=(i,)) for i in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    inj.cancel_all()
+    assert sum(results) == 1, f"times=1 rule armed {sum(results)} kills"
+    assert inj.kills_armed() == 1
+
+
+def test_check_worker_fires_once_per_rule_budget():
+    inj = FaultInjector(worker_rules=[WorkerKillRule(after_steps=3, times=2)])
+    # below the threshold: never fires
+    assert inj.check_worker("w0", 0, steps=0, tokens=0) is None
+    assert inj.check_worker("w0", 0, steps=2, tokens=9) is None
+    # at the threshold: fires, with a progress-stamped reason
+    reason = inj.check_worker("w0", 0, steps=3, tokens=11)
+    assert reason == "chaos:w0:a0:steps=3:tokens=11"
+    # same attempt past the kill point: NOT re-killed every step
+    assert inj.check_worker("w0", 0, steps=4, tokens=12) is None
+    # the restarted attempt consumes the second (and last) budget unit
+    assert inj.check_worker("w0", 1, steps=3, tokens=0) is not None
+    assert inj.check_worker("w1", 0, steps=5, tokens=0) is None  # exhausted
+    assert inj.kills_armed() == 2
+
+
+def test_check_worker_filters_and_conjunction():
+    rules = [
+        WorkerKillRule(worker="w1", attempt=1, after_steps=1),
+        WorkerKillRule(after_steps=2, after_tokens=5, times=3),
+    ]
+    # worker/attempt filters
+    inj2 = FaultInjector(worker_rules=[rules[0]])
+    assert inj2.check_worker("w0", 1, steps=9, tokens=9) is None
+    assert inj2.check_worker("w1", 0, steps=9, tokens=9) is None
+    assert inj2.check_worker("w1", 1, steps=0, tokens=0) is None
+    assert inj2.check_worker("w1", 1, steps=1, tokens=0) is not None
+    # both-set rule: BOTH thresholds must be reached
+    inj3 = FaultInjector(worker_rules=[rules[1]])
+    assert inj3.check_worker("a", 0, steps=2, tokens=4) is None
+    assert inj3.check_worker("a", 0, steps=1, tokens=7) is None
+    assert inj3.check_worker("a", 0, steps=2, tokens=5) is not None
+
+
+def test_check_worker_threaded_exactly_once():
+    """N workers cross a times=1 rule's threshold simultaneously: exactly
+    one dies (the check-then-increment is atomic under the lock)."""
+    inj = FaultInjector(worker_rules=[WorkerKillRule(after_steps=1, times=1)])
+    n = 12
+    barrier = threading.Barrier(n)
+    out = [None] * n
+
+    def runner(i):
+        barrier.wait()
+        out[i] = inj.check_worker(f"w{i}", 0, steps=1, tokens=0)
+
+    threads = [threading.Thread(target=runner, args=(i,)) for i in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    fired = [r for r in out if r is not None]
+    assert len(fired) == 1, f"times=1 worker rule fired {len(fired)} kills"
+    assert inj.kills_armed() == 1
+
+
+def test_rules_without_thresholds_are_inert():
+    inj = FaultInjector(worker_rules=[WorkerKillRule(worker="w0")])
+    assert inj.check_worker("w0", 0, steps=100, tokens=100) is None
+    assert inj.kills_armed() == 0

@@ -1,0 +1,291 @@
+"""Deterministic chaos harness for the supervised serving fleet.
+
+Drives ``core/faults.py`` worker-kill rules against a live 2–3 worker
+:class:`FleetSupervisor` on a mixed submit/cancel/shared-prefix trace and
+asserts, across three distinct crash schedules (mid-prefill, mid-decode,
+during cancel), the recovery contract from ``serving/fleet.py``:
+
+(a) every request reaches a typed terminal finish reason,
+(b) every completed stream is byte-identical to an unperturbed
+    single-engine oracle replay of the same trace — no token re-emitted
+    or skipped across the crash boundary (the ``responses`` topic carries
+    each ``(uid, index)`` exactly once, in order),
+(c) requests cancelled around a crash finish ``cancelled``, never hang,
+(d) the autoscaler's replica decisions stay inside [min, max] under the
+    crash-induced lag spike.
+
+Kills are keyed on each worker's OWN progress counters, checked
+synchronously inside the worker loop (``FaultInjector.check_worker``), so
+a schedule pins the crash at an exact point in the victim's execution and
+every assertion here is independent of thread scheduling.
+"""
+
+import time
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import ARCHS, reduced
+from repro.core import TopicBus
+from repro.core.faults import FaultInjector, WorkerKillRule
+from repro.models import build_model
+from repro.serving import (
+    ContinuousBatchingEngine,
+    FleetConfig,
+    FleetSupervisor,
+    fleet_seed,
+    request_from_message,
+)
+
+SEED_BASE = 777
+ENGINE_KW = dict(max_len=96, max_slots=3, page_size=8, prefill_chunk=8,
+                 prefix_sharing=True, seed=0)
+TERMINAL = {"length", "stop", "cancelled", "rejected"}
+
+
+@pytest.fixture(scope="module")
+def smollm():
+    cfg = reduced(ARCHS["smollm-360m"])
+    model = build_model(cfg)
+    return cfg, model.init(jax.random.key(0))
+
+
+# ---------------------------------------------------------------------------
+# trace + oracle
+# ---------------------------------------------------------------------------
+
+
+def _trace(seed: int, n: int = 9) -> list[dict]:
+    """Bus-schema payloads: shared 16-token prefix on half, mixed greedy and
+    seeded-sampled rows, a few with ``seed=None`` (the supervisor stamps
+    those), prompts long enough that prefill spans several chunk-8 steps,
+    plus one long-running stream for the mid-decode/cancel arms."""
+    rng = np.random.default_rng(seed)
+    prefix = [int(x) for x in rng.integers(1, 250, 16)]
+    payloads = []
+    for i in range(n):
+        body = [int(x) for x in rng.integers(1, 250, int(rng.integers(18, 30)))]
+        payloads.append({
+            "uid": f"c{i}",
+            "prompt": (prefix if i % 2 == 0 else []) + body,
+            "max_new_tokens": int(rng.integers(3, 7)),
+            "temperature": 0.7 if i % 3 == 2 else 0.0,
+            "top_k": 8 if i % 3 == 2 else 0,
+            "seed": 1000 + i if i % 4 else None,
+        })
+    payloads.append({
+        "uid": "long", "prompt": prefix + [7, 8, 9], "max_new_tokens": 18,
+        "temperature": 0.7, "top_k": 8, "seed": 4242,
+    })
+    return payloads
+
+
+def _stamped(payloads: list[dict]) -> list[dict]:
+    """What the supervisor forwards: unseeded payloads get the deterministic
+    ingress-order seed, exactly as ``FleetSupervisor._ingress`` stamps it."""
+    out = []
+    for i, p in enumerate(payloads):
+        q = dict(p)
+        if q.get("seed") is None:
+            q["seed"] = fleet_seed(SEED_BASE, i)
+        out.append(q)
+    return out
+
+
+def _oracle(cfg, params, payloads: list[dict]) -> dict[str, list[int]]:
+    """Unperturbed single-engine replay — the byte-identity reference."""
+    eng = ContinuousBatchingEngine(cfg, params, **ENGINE_KW)
+    handles = {}
+    for q in _stamped(payloads):
+        h = eng.submit(request_from_message(q))
+        assert not h.done, (q["uid"], h.error)
+        handles[q["uid"]] = h
+    while not eng.idle:
+        eng.step()
+    return {u: list(h.tokens) for u, h in handles.items()}
+
+
+# ---------------------------------------------------------------------------
+# harness
+# ---------------------------------------------------------------------------
+
+
+def _fleet_cfg() -> FleetConfig:
+    return FleetConfig(
+        workers=2, min_replicas=1, max_replicas=3,
+        target_lag_per_replica=4.0, scale_down_grace_s=0.3,
+        beat_interval_s=0.01, seed_base=SEED_BASE, max_restarts=3,
+    )
+
+
+def _make_sup(tmp_path, cfg, params, injector) -> FleetSupervisor:
+    bus = TopicBus(tmp_path / "bus")
+    return FleetSupervisor(
+        bus, lambda: ContinuousBatchingEngine(cfg, params, **ENGINE_KW),
+        _fleet_cfg(), injector=injector)
+
+
+def _poll_until(sup: FleetSupervisor, cond, timeout_s: float = 90.0) -> None:
+    deadline = time.monotonic() + timeout_s
+    while time.monotonic() < deadline:
+        sup.poll()
+        if cond():
+            return
+        time.sleep(0.002)
+    raise AssertionError("condition not reached before timeout")
+
+
+def _owner_name(sup: FleetSupervisor, uid: str) -> str:
+    pod_id = sup.states[uid].owner
+    assert pod_id is not None
+    return pod_id.rsplit("-a", 1)[0]
+
+
+def _assert_recovered(sup: FleetSupervisor, bus: TopicBus,
+                      oracle: dict[str, list[int]],
+                      cancelled: set[str] = frozenset()) -> None:
+    """The full post-crash invariant sweep: typed terminals, byte-identity
+    vs the oracle, exactly-once per-index delivery on ``responses``, zero
+    mismatched/gapped deltas, autoscale decisions in bounds."""
+    states = sup.results()
+    assert set(states) == set(oracle)
+    for uid, st in states.items():
+        assert st.finish_reason in TERMINAL, (uid, st.finish_reason)
+        if uid in cancelled:
+            assert st.finish_reason == "cancelled", uid
+            assert st.tokens == oracle[uid][:len(st.tokens)], uid
+        else:
+            assert st.finish_reason in ("length", "stop"), (uid, st.error)
+            assert st.tokens == oracle[uid], uid
+
+    # replay-identical recovery: a regenerated token never differed from
+    # what was already delivered, and no index was ever skipped
+    assert sup.metrics.mismatched_deltas == 0
+    assert sup.metrics.gapped_deltas == 0
+
+    # the client-visible stream: per uid, delta indices are exactly
+    # range(n), each index exactly once, all before the single finish
+    deltas: dict[str, list] = {}
+    finishes: dict[str, tuple] = {}
+    for m in bus.read("responses"):
+        v = m.value
+        if v["event"] == "delta":
+            deltas.setdefault(v["uid"], []).append(
+                (v["index"], v["token"], m.offset))
+        else:
+            assert v["uid"] not in finishes, f"{v['uid']}: duplicate finish"
+            finishes[v["uid"]] = (v, m.offset)
+    for uid, st in states.items():
+        got = deltas.get(uid, [])
+        assert [i for i, _, _ in got] == list(range(len(st.tokens))), uid
+        assert [t for _, t, _ in got] == st.tokens, uid
+        v, fin_off = finishes[uid]
+        assert v["tokens"] == st.tokens, uid
+        assert v["finish_reason"] == st.finish_reason, uid
+        if got:
+            assert max(o for _, _, o in got) < fin_off, (
+                f"{uid}: delta published after finish")
+
+    for e in sup.events.history("autoscale"):
+        assert 1 <= e["new"] <= sup.cfg.max_replicas, e
+        assert 1 <= e["old"] <= sup.cfg.max_replicas, e
+
+
+# ---------------------------------------------------------------------------
+# the three crash schedules
+# ---------------------------------------------------------------------------
+
+
+def test_crash_mid_prefill(smollm, tmp_path):
+    """First worker to complete one engine step dies: prompts are 30+
+    tokens against a chunk of 8, so one step in the victim has prefilled
+    at most one chunk and emitted zero output tokens — a pure mid-prefill
+    crash. Its accepted requests replay elsewhere from token 0."""
+    cfg, params = smollm
+    payloads = _trace(0)
+    injector = FaultInjector(
+        worker_rules=[WorkerKillRule(after_steps=1, times=1)])
+    sup = _make_sup(tmp_path, cfg, params, injector)
+    try:
+        for p in payloads:
+            sup.submit(p)
+        assert sup.run(expected=[p["uid"] for p in payloads], timeout_s=180)
+    finally:
+        sup.shutdown()
+    assert injector.kills_armed() == 1
+    assert sup.metrics.crashes >= 1
+    assert sup.metrics.resubmitted >= 1, "victim owned nothing: no recovery"
+    assert any(st.resubmits > 0 for st in sup.states.values())
+    _assert_recovered(sup, sup.bus, _oracle(cfg, params, payloads))
+
+
+def test_crash_mid_decode(smollm, tmp_path):
+    """Kill the worker that owns the long-running stream once at least two
+    of its tokens have been DELIVERED to the client: recovery must resume
+    at exactly the next undelivered index, and the supervisor's dedupe
+    must silently absorb the regenerated prefix."""
+    cfg, params = smollm
+    payloads = _trace(1)
+    injector = FaultInjector()  # rule appended once the victim is known
+    sup = _make_sup(tmp_path, cfg, params, injector)
+    try:
+        for p in payloads:
+            sup.submit(p)
+        sup.start()
+        _poll_until(sup, lambda: (
+            "long" in sup.states
+            and sup.states["long"].owner is not None
+            and len(sup.states["long"].tokens) >= 2
+            and sup.states["long"].finish_reason is None))
+        delivered_at_kill = len(sup.states["long"].tokens)
+        injector.worker_rules.append(
+            WorkerKillRule(worker=_owner_name(sup, "long"), after_steps=0,
+                           times=1))
+        assert sup.run(expected=[p["uid"] for p in payloads], timeout_s=180)
+    finally:
+        sup.shutdown()
+    assert injector.kills_armed() == 1
+    assert sup.metrics.crashes >= 1
+    long = sup.states["long"]
+    assert long.resubmits >= 1, "owner survived: kill rule never fired"
+    assert long.resume_from >= delivered_at_kill >= 2
+    assert long.recovery_s is not None and long.recovery_s >= 0.0
+    assert sup.metrics.recovery_s, "resumption latency not recorded"
+    # the replacement regenerated the already-delivered prefix and the
+    # supervisor dropped every regenerated token
+    assert sup.metrics.duplicate_deltas >= delivered_at_kill
+    _assert_recovered(sup, sup.bus, _oracle(cfg, params, payloads))
+
+
+def test_crash_during_cancel(smollm, tmp_path):
+    """Cancel the long stream, then immediately kill its owner: whether the
+    victim processed the cancel before dying or the supervisor finished
+    the orphaned cancel directly, the request must terminate ``cancelled``
+    with an oracle-prefix stream — and must never be resurrected by the
+    resubmit path or hang."""
+    cfg, params = smollm
+    payloads = _trace(2)
+    injector = FaultInjector()
+    sup = _make_sup(tmp_path, cfg, params, injector)
+    try:
+        for p in payloads:
+            sup.submit(p)
+        sup.start()
+        _poll_until(sup, lambda: (
+            "long" in sup.states
+            and sup.states["long"].owner is not None
+            and sup.states["long"].finish_reason is None))
+        assert sup.cancel("long")
+        injector.worker_rules.append(
+            WorkerKillRule(worker=_owner_name(sup, "long"), after_steps=0,
+                           times=1))
+        assert sup.run(expected=[p["uid"] for p in payloads], timeout_s=180)
+    finally:
+        sup.shutdown()
+    assert injector.kills_armed() == 1
+    assert sup.metrics.crashes >= 1
+    assert sup.states["long"].resubmits == 0, "cancelled request resubmitted"
+    _assert_recovered(sup, sup.bus, _oracle(cfg, params, payloads),
+                      cancelled={"long"})

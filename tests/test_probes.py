@@ -1,0 +1,126 @@
+"""Units for the probe-state machine (``core/probes.py``), serving edition.
+
+Deterministic without sleeps: heartbeats are published at real wall time,
+and the monitor's injected ``clock`` is then moved forward relative to
+``time.time()`` to place "now" exactly where each assertion needs it —
+inside the liveness window, past the livelock window, past the liveness
+window — so no test waits for a real gap to elapse.
+"""
+
+import time
+
+import pytest
+
+from repro.core.bus import TopicBus
+from repro.core.probes import HealthMonitor, HeartbeatWriter
+
+
+@pytest.fixture
+def bus(tmp_path):
+    return TopicBus(tmp_path / "bus")
+
+
+def _monitor(bus, clock_holder, liveness=10.0, livelock=None):
+    return HealthMonitor(bus, liveness_window_s=liveness,
+                         livelock_window_s=livelock,
+                         clock=lambda: clock_holder["t"])
+
+
+def test_not_ready_to_live_to_dead(bus):
+    now = {"t": time.time()}
+    mon = _monitor(bus, now)
+    hb = HeartbeatWriter(bus, "p0")
+
+    assert mon.status("p0") == "unknown"
+    hb.beat(progress=0)  # beats before ready: still initializing
+    assert mon.status("p0") == "not_ready"
+    hb.ready()
+    now["t"] = time.time()
+    assert mon.status("p0") == "live"
+    now["t"] = time.time() + 5
+    assert mon.status("p0") == "live"  # inside the window
+    now["t"] = time.time() + 11
+    assert mon.status("p0") == "dead"
+    assert mon.dead_pods() == ["p0"]
+    # a fresh beat revives it
+    hb.beat(progress=1)
+    now["t"] = time.time()
+    assert mon.status("p0") == "live"
+
+
+def test_livelock_detection(bus):
+    """Heartbeats arriving, pod busy, progress flat -> livelocked; progress
+    advancing or pod idle -> live; detection off without a window."""
+    now = {"t": time.time()}
+    mon = _monitor(bus, now, liveness=100.0, livelock=2.0)
+    hb = HeartbeatWriter(bus, "p0")
+    hb.ready()
+    hb.beat(progress=3, busy=True)
+
+    now["t"] = time.time() + 1
+    assert mon.status("p0") == "live"  # flat for 1s < livelock window
+    now["t"] = time.time() + 5
+    assert mon.status("p0") == "livelocked"  # busy, flat past the window
+    assert ("p0", "livelocked") in mon.unhealthy_pods()
+    assert mon.dead_pods() == []  # livelock is NOT dead (scheduler compat)
+
+    # forward progress resets the livelock clock
+    hb.beat(progress=4, busy=True)
+    now["t"] = time.time() + 1
+    assert mon.status("p0") == "live"
+
+    # an idle pod owes no progress: flat counter but busy=False stays live
+    hb.beat(progress=4, busy=False)
+    now["t"] = time.time() + 5
+    assert mon.status("p0") == "live"
+
+    # same history, no livelock window configured: never livelocked
+    mon2 = _monitor(bus, now, liveness=100.0, livelock=None)
+    hb2 = HeartbeatWriter(bus, "p1")
+    hb2.ready()
+    hb2.beat(progress=1, busy=True)
+    now["t"] = time.time() + 50
+    assert mon2.status("p1") == "live"
+
+
+def test_unhealthy_pods_and_forget(bus):
+    now = {"t": time.time()}
+    mon = _monitor(bus, now, liveness=10.0, livelock=2.0)
+    for name in ("dead0", "lock0", "ok0"):
+        hb = HeartbeatWriter(bus, name)
+        hb.ready()
+        hb.beat(progress=1, busy=True)
+    # ok0 keeps making progress right up to "now"
+    HeartbeatWriter(bus, "ok0").beat(progress=2, busy=True)
+
+    mon.refresh()
+    # dead0's beats are ancient relative to a far-future clock; fake that by
+    # aging only its last_ts (the bus stamps real time, so we edit the view)
+    mon._state["dead0"].last_ts -= 20
+    mon._state["lock0"].progress_ts -= 5
+    mon._state["ok0"].progress_ts = now["t"]
+
+    states = dict(mon.unhealthy_pods())
+    assert states["dead0"] == "dead"
+    assert states["lock0"] == "livelocked"
+    assert "ok0" not in states
+    assert mon.dead_pods() == ["dead0"]
+
+    mon.forget("dead0")
+    assert "dead0" not in dict(mon.unhealthy_pods())
+    assert mon.progress("lock0") == 1
+    assert set(mon.heartbeat_times()) >= {"lock0", "ok0"}
+
+
+def test_progress_ts_tracks_advancement_only(bus):
+    """The livelock clock restarts on progress CHANGE, not on every beat —
+    a wedged-but-beating worker cannot reset it."""
+    now = {"t": time.time()}
+    mon = _monitor(bus, now, liveness=100.0, livelock=2.0)
+    hb = HeartbeatWriter(bus, "p0")
+    hb.ready()
+    hb.beat(progress=7, busy=True)
+    for _ in range(5):
+        hb.beat(progress=7, busy=True)  # beats keep coming, progress flat
+    now["t"] = time.time() + 3
+    assert mon.status("p0") == "livelocked"

@@ -243,6 +243,80 @@ def test_paged_engine_invariants_under_stress(smollm, seed):
             assert h.tokens == want, uid
 
 
+@pytest.mark.parametrize("seed", [0, 1])
+def test_paged_engine_restart_mid_trace(smollm, seed):
+    """Worker-restart perturbation arm: the engine is torn down mid-trace
+    (the fleet's crash model — state lost, handles stranded) and a fresh
+    engine is rebuilt with every unfinished in-flight request resubmitted
+    under its original sampling seed. The same invariant sweep must hold
+    on the rebuilt engine after every step, and the combined streams —
+    tokens delivered before the crash + the resubmitted run — must be
+    byte-identical to the unperturbed oracle, with the pre-crash delivery
+    an exact prefix of the regenerated stream (no token re-emitted or
+    skipped across the restart)."""
+    cfg, params = smollm
+    reqs, actions, _attempted = _make_trace(seed)
+    kw = dict(max_slots=4, page_size=PAGE, num_pages=8, prefill_chunk=PAGE,
+              prefix_sharing=True, seed=seed)
+    engine = ContinuousBatchingEngine(cfg, params, max_len=MAX_LEN, **kw)
+    by_uid = {r.uid: r for r in reqs}
+    handles: dict[str, object] = {}
+    cancelled = set()
+    crash_step = 6  # past every submit burst and both cancels
+    for step in range(crash_step):
+        for kind, uid in actions.get(step, []):
+            if kind == "submit":
+                handles[uid] = engine.submit(by_uid[uid])
+            elif engine.cancel(uid):
+                cancelled.add(uid)
+        engine.step()
+        _check_paged_invariants(engine)
+
+    # the crash: engine state is gone; only the delivered tokens survive
+    delivered = {uid: list(h.tokens) for uid, h in handles.items()}
+    pre_crash = {uid: h for uid, h in handles.items() if h.done}
+    inflight = [uid for uid, h in handles.items() if not h.done]
+    assert inflight, "crash step too late: nothing was in flight"
+    assert any(delivered[u] for u in inflight), (
+        "crash step too early: no mid-stream request to resume")
+    del engine
+
+    engine2 = ContinuousBatchingEngine(cfg, params, max_len=MAX_LEN, **kw)
+    handles2 = {
+        uid: engine2.submit(Request(uid, list(by_uid[uid].prompt),
+                                    sampling=by_uid[uid].sampling))
+        for uid in inflight
+    }
+    steps = 0
+    while not engine2.idle:
+        engine2.step()
+        _check_paged_invariants(engine2)
+        steps += 1
+        assert steps < 600, "restarted trace failed to drain"
+
+    # rebuilt-engine drain state: pool reclaimed, prefix index empty
+    assert engine2.cache.pool.available == engine2.cache.num_pages - 1
+    assert not engine2.cache._prefix_index and not engine2.cache._page_key
+
+    oracle = _replay(cfg, params, ContinuousBatchingEngine, reqs, **kw)
+    for uid, h in pre_crash.items():
+        assert isinstance(h.finish_reason, FinishReason), uid
+        want = oracle[uid].tokens
+        if uid in cancelled:
+            assert h.tokens == want[:len(h.tokens)], uid
+        else:
+            assert h.tokens == want, uid
+    for uid, h in handles2.items():
+        assert h.finish_reason in (FinishReason.LENGTH, FinishReason.STOP), uid
+        # seeded replay: the regenerated stream IS the original stream, so
+        # the pre-crash delivery is an exact prefix — a client that dedupes
+        # by index (the fleet supervisor) sees every token exactly once
+        assert h.tokens == oracle[uid].tokens, uid
+        pre = delivered[uid]
+        assert h.tokens[:len(pre)] == pre, (
+            f"{uid}: pre-crash delivery is not a prefix of the replay")
+
+
 @pytest.mark.parametrize("seed", [0])
 def test_lockstep_engine_invariants_under_stress(smollm, seed):
     cfg, params = smollm
