@@ -497,6 +497,127 @@ def bench_serving_shared_prefix(quick: bool):
                   prefix_tokens_reused=int(reused))
 
 
+def bench_serving_rerun(quick: bool):
+    """Tiered KV cache on the pipeline-RERUN workload: the same prompt set
+    served repeatedly with full idle drains in between — the notebook-rerun
+    shape the paper motivates (rerun the pipeline, prompt prefixes
+    identical, but no request is live when the next burst lands).
+
+    Without tiers, prefix pages free when the last stream of a burst
+    finishes, so every burst re-prefills the prefix from scratch and only
+    WITHIN-burst COW sharing reuses tokens. With tiers, zero-refcount
+    prefix pages park on-device and later bursts revive them, so the
+    prefix prefill is skipped entirely. The headline numbers: burst-2+
+    ``prefix_tokens_reused`` (tiers-on must be >= 2x tiers-off — the PR's
+    acceptance bound) and the tier hit counters. Alternated best-of, like
+    the other serving benches; reuse counters come from the LAST round so
+    warm parked state reflects steady rerun traffic.
+    """
+    import jax
+
+    from repro.configs import ARCHS, reduced
+    from repro.models import build_model
+    from repro.serving import ContinuousBatchingEngine, Request
+    from repro.serving.metrics import UtilizationMetrics
+
+    cfg = reduced(ARCHS["smollm-360m"])
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+
+    rng = np.random.default_rng(5)
+    n = 6 if quick else 12
+    bursts = 2 if quick else 3
+    # every request is a DISTINCT 96-token prompt (one per "pipeline cell")
+    # plus a short novel suffix — so within a burst there is nothing to
+    # share and all cross-burst reuse is the tier machinery's doing
+    trace = [
+        Request(
+            f"t{i}",
+            list(rng.integers(1, cfg.vocab_size, 96))
+            + list(rng.integers(1, cfg.vocab_size, rng.integers(4, 17))),
+            max_new_tokens=int(rng.integers(8, 17)),
+        )
+        for i in range(n)
+    ]
+    useful = bursts * sum(r.max_new_tokens for r in trace)
+    max_len = 96 + 16 + 16
+    slots = 4
+
+    # pool sized for the rerun working set (n prompts x ~7 pages each) so
+    # parked chains survive a full burst; the host tier catches overflow —
+    # an undersized device pool just LRU-thrashes (each admission evicting
+    # the chain the next prompt needs), which is a pool-sizing problem,
+    # not a tier-policy one
+    num_pages = n * (96 // 16 + 2) + 2 * slots
+    def make(tiers: bool):
+        return ContinuousBatchingEngine(
+            cfg, params, max_len=max_len, max_slots=slots, page_size=16,
+            prefill_chunk=32, num_pages=num_pages, kv_tiers=tiers,
+            host_pages=num_pages if tiers else 0,
+        )
+
+    def one_run(engine):
+        """Serve ``bursts`` identical bursts, draining to idle between
+        them; returns wall time + the per-burst prefix reuse counts."""
+        engine.utilization = UtilizationMetrics()
+        reused = []
+        t0 = time.perf_counter()
+        for _ in range(bursts):
+            base = engine.cache.stats["prefix_tokens_reused"]
+            _drain(engine, _fresh(trace))
+            reused.append(engine.cache.stats["prefix_tokens_reused"] - base)
+        return time.perf_counter() - t0, reused
+
+    engines = {"tiers_on": make(True), "tiers_off": make(False)}
+    for engine in engines.values():
+        one_run(engine)  # warm: compile + (tiers_on) park the prefix
+    rounds = 1 if quick else 3
+    best: dict = {}
+    last: dict = {}
+    for _ in range(rounds):
+        for name, engine in engines.items():
+            s, reused = one_run(engine)
+            last[name] = reused
+            if name not in best or s < best[name][0]:
+                best[name] = (s, reused)
+    on_s, _ = best["tiers_on"]
+    off_s, _ = best["tiers_off"]
+    # reuse counts are deterministic given warm state — report the last
+    # round's, which reflects steady rerun traffic for both arms
+    on_reuse, off_reuse = last["tiers_on"], last["tiers_off"]
+    rerun_on = sum(on_reuse[1:]) / max(bursts - 1, 1)
+    rerun_off = sum(off_reuse[1:]) / max(bursts - 1, 1)
+    tiers = engines["tiers_on"].tiers
+    assert tiers is not None and engines["tiers_off"].tiers is None
+
+    row("serve_rerun_tiers_off", off_s * 1e6,
+        f"tok_per_s={useful/off_s:.1f};burst2_prefix_reused={rerun_off:.0f}")
+    row("serve_rerun_tiers_on", on_s * 1e6,
+        f"tok_per_s={useful/on_s:.1f};burst2_prefix_reused={rerun_on:.0f};"
+        f"reuse_ratio={rerun_on/max(rerun_off, 1):.1f}x;"
+        f"tier_hits=dev{tiers.counters['device_hits']}")
+
+    SERVING["bench_serving_rerun"] = {"config": {
+        "arch": cfg.name, "requests_per_burst": n, "bursts": bursts,
+        "prompt_len": [96 + 4, 96 + 16], "distinct_prompts": True,
+        "max_new": [8, 16], "slots": slots, "prefill_chunk": 32,
+        "best_of": rounds,
+    }}
+    serving_entry("bench_serving_rerun", "tiers_off",
+                  tok_per_s=useful / off_s,
+                  prefix_tokens_reused_per_burst=off_reuse,
+                  rerun_burst_prefix_reused=round(rerun_off, 1))
+    serving_entry("bench_serving_rerun", "tiers_on",
+                  tok_per_s=useful / on_s,
+                  prefix_tokens_reused_per_burst=on_reuse,
+                  rerun_burst_prefix_reused=round(rerun_on, 1),
+                  rerun_reuse_ratio_vs_off=round(
+                      rerun_on / max(rerun_off, 1), 2),
+                  tier_counters={k: v for k, v in tiers.counters.items()
+                                 if not k.endswith("_s")},
+                  utilization=engines["tiers_on"].utilization.summary())
+
+
 def bench_serving_prefill_heavy(quick: bool):
     """Kernel-path vs ref-path chunked prefill on a prefill-heavy trace:
     long prompts, tiny max_new — the regime where TTFT is bounded by the
@@ -805,8 +926,8 @@ def main() -> None:
     benches = (bench_split, bench_bus, bench_storage, bench_ckpt,
                bench_kernels, bench_recovery, bench_scaling, bench_step,
                bench_serving, bench_serving_shared_prefix,
-               bench_serving_prefill_heavy, bench_serving_low_load,
-               bench_fleet_recovery)
+               bench_serving_rerun, bench_serving_prefill_heavy,
+               bench_serving_low_load, bench_fleet_recovery)
     for bench in benches:
         if args.only and args.only not in bench.__name__:
             continue

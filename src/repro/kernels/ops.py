@@ -130,6 +130,8 @@ def paged_attention(
     block_tables: jax.Array,  # (B, MP) int32
     lengths: jax.Array,       # (B,) int32 valid positions per sequence
     *,
+    k_scale: jax.Array | None = None,  # (P, page, KVH) int8-page scales
+    v_scale: jax.Array | None = None,
     scale: float | None = None,
     impl: str = "auto",
     interpret: bool = False,
@@ -138,6 +140,12 @@ def paged_attention(
 
     Idle slots (length 0) return zeros rather than NaN, so a continuous
     batcher can keep dead rows in the decode batch.
+
+    Quantized pools: when ``k_scale``/``v_scale`` are given the pages are
+    int8 with one f32 scale per (page, position, kv head). The Pallas path
+    fuses dequant into the page load; the XLA fallback dequantizes the pool
+    through :func:`ref.dequantize_pages` and runs the unchanged fp32 oracle,
+    so both lowerings share one ground truth.
 
     Shard-local contract (sharded serving): under the executor's
     ``shard_map`` this op receives the PER-SHARD head slice — q carries
@@ -158,6 +166,9 @@ def paged_attention(
         f"caller must slice both by the same tensor-parallel degree"
     )
     if impl in ("naive", "xla_chunked"):
+        if k_scale is not None:
+            k_pages = ref.dequantize_pages(k_pages, k_scale)
+            v_pages = ref.dequantize_pages(v_pages, v_scale)
         return ref.paged_attention_ref(
             q, k_pages, v_pages, block_tables, lengths, scale=scale
         )
@@ -165,6 +176,7 @@ def paged_attention(
         qg = q.reshape(b, kvh, h // kvh, d)
         out = paged_attention_bkgd(
             qg, k_pages, v_pages, block_tables, lengths,
+            k_scale=k_scale, v_scale=v_scale,
             scale=scale, interpret=interpret,
         )
         return out.reshape(b, h, d)
@@ -179,6 +191,8 @@ def paged_prefill_attention(
     start: jax.Array,        # scalar int32: positions already cached
     valid: jax.Array,        # scalar int32: real tokens in this chunk
     *,
+    k_scale: jax.Array | None = None,  # (P, page, KVH) int8-page scales
+    v_scale: jax.Array | None = None,
     scale: float | None = None,
     impl: str = "auto",
     interpret: bool = False,
@@ -207,6 +221,9 @@ def paged_prefill_attention(
         f"caller must slice both by the same tensor-parallel degree"
     )
     if impl in ("naive", "xla_chunked"):
+        if k_scale is not None:
+            k_pages = ref.dequantize_pages(k_pages, k_scale)
+            v_pages = ref.dequantize_pages(v_pages, v_scale)
         return ref.paged_prefill_attention_ref(
             q, k_pages, v_pages, block_table, start, valid, scale=scale
         )
@@ -214,6 +231,7 @@ def paged_prefill_attention(
         qg = q.reshape(c, kvh, h // kvh, d)
         out = paged_prefill_attention_ckgd(
             qg, k_pages, v_pages, block_table, start, valid,
+            k_scale=k_scale, v_scale=v_scale,
             scale=scale, interpret=interpret,
         )
         return out.reshape(c, h, d)
@@ -227,6 +245,8 @@ def paged_mixed_attention(
     block_tables: jax.Array,  # (R, MP) int32, one block-table row per row
     last_pos: jax.Array,      # (R,) int32 last attendable position, -1 = dead
     *,
+    k_scale: jax.Array | None = None,  # (P, page, KVH) int8-page scales
+    v_scale: jax.Array | None = None,
     scale: float | None = None,
     impl: str = "auto",
     interpret: bool = False,
@@ -270,6 +290,9 @@ def paged_mixed_attention(
         f"caller must slice both by the same tensor-parallel degree"
     )
     if impl in ("naive", "xla_chunked"):
+        if k_scale is not None:
+            k_pages = ref.dequantize_pages(k_pages, k_scale)
+            v_pages = ref.dequantize_pages(v_pages, v_scale)
         if num_decode is None or not 0 < num_decode < r:
             return ref.paged_mixed_attention_ref(
                 q, k_pages, v_pages, block_tables, last_pos, scale=scale
@@ -292,6 +315,7 @@ def paged_mixed_attention(
         qg = q.reshape(r, kvh, h // kvh, d)
         out = paged_mixed_attention_rkgd(
             qg, k_pages, v_pages, block_tables, last_pos,
+            k_scale=k_scale, v_scale=v_scale,
             scale=scale, interpret=interpret,
         )
         return out.reshape(r, h, d)

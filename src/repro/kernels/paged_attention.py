@@ -41,6 +41,13 @@ partial last page, a COW-forked table or history length 0 all fall out of
 the one mask — there is no special-cased edge. Pages wholly past the
 chunk's last live query (``p*page >= start+valid``) are skipped.
 
+All three kernels optionally take int8 pages with per-(position, head)
+``k_scale``/``v_scale`` pools (shape (P, page, KVH), f32): the scales ride
+the SAME scalar-prefetched block table as their pages and dequantization is
+fused into the VMEM page load (``k * scale[:, None]``), so a quantized pool
+costs one extra (page, 1)-shaped DMA per grid cell and no HBM-resident f32
+copy ever exists. Oracle: ``ref.dequantize_pages`` + the fp32 refs.
+
 Tensor-parallel serving dispatches BOTH kernels PER SHARD: the serving
 executor's ``shard_map`` hands each device its contiguous kv-head slice of
 the page pool (KVH/tp heads) and the matching grouped-q slice, with block
@@ -67,13 +74,17 @@ def _paged_kernel(
     bt_ref,    # (B, MP) int32 scalar-prefetch: block tables
     len_ref,   # (B,)  int32 scalar-prefetch: valid positions per sequence
     q_ref, k_ref, v_ref,  # VMEM blocks
-    o_ref,
-    acc_ref, m_ref, l_ref,  # VMEM scratch
-    *,
+    *rest,     # [ks_ref, vs_ref when quant], o_ref, acc_ref, m_ref, l_ref
     scale: float,
     page_size: int,
     num_logical_pages: int,
+    quant: bool = False,
 ):
+    if quant:
+        ks_ref, vs_ref, o_ref, acc_ref, m_ref, l_ref = rest
+    else:
+        ks_ref = vs_ref = None
+        o_ref, acc_ref, m_ref, l_ref = rest
     b = pl.program_id(0)
     p = pl.program_id(2)
 
@@ -92,6 +103,11 @@ def _paged_kernel(
         q = q_ref[0, 0].astype(jnp.float32)        # (G, D)
         k = k_ref[0, :, 0].astype(jnp.float32)     # (page, D)
         v = v_ref[0, :, 0].astype(jnp.float32)
+        if quant:
+            # int8 pages: dequant fused into the page load — one row scale
+            # per (position, head), never materialized outside VMEM
+            k = k * ks_ref[0, :, 0][:, None]
+            v = v * vs_ref[0, :, 0][:, None]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         ) * scale                                   # (G, page)
@@ -129,6 +145,8 @@ def paged_attention_bkgd(
     block_tables: jax.Array,  # (B, MP) int32
     lengths: jax.Array,       # (B,) int32
     *,
+    k_scale: jax.Array | None = None,  # (P, page, KVH) f32 int8-page scales
+    v_scale: jax.Array | None = None,
     scale: float | None = None,
     interpret: bool = False,
 ) -> jax.Array:
@@ -137,6 +155,8 @@ def paged_attention_bkgd(
     assert pkvh == kvh, (pkvh, kvh)
     mp = block_tables.shape[1]
     scale = scale if scale is not None else d ** -0.5
+    quant = k_scale is not None
+    assert quant == (v_scale is not None), "k_scale/v_scale go together"
 
     grid = (b, kvh, mp)
     kernel = functools.partial(
@@ -144,24 +164,32 @@ def paged_attention_bkgd(
         scale=scale,
         page_size=page_size,
         num_logical_pages=mp,
+        quant=quant,
     )
+    page_spec = pl.BlockSpec(
+        (1, page_size, 1, d),
+        lambda b_, h_, p_, bt, ln: (bt[b_, p_], 0, h_, 0),
+    )
+    in_specs = [
+        pl.BlockSpec(
+            (1, 1, group, d), lambda b_, h_, p_, bt, ln: (b_, h_, 0, 0)
+        ),
+        # physical page comes from the prefetched block table
+        page_spec,
+        page_spec,
+    ]
+    operands = [q, k_pages, v_pages]
+    if quant:
+        # per-(position, head) scales ride the same prefetched table
+        scale_spec = pl.BlockSpec(
+            (1, page_size, 1), lambda b_, h_, p_, bt, ln: (bt[b_, p_], 0, h_)
+        )
+        in_specs += [scale_spec, scale_spec]
+        operands += [k_scale, v_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec(
-                (1, 1, group, d), lambda b_, h_, p_, bt, ln: (b_, h_, 0, 0)
-            ),
-            # physical page comes from the prefetched block table
-            pl.BlockSpec(
-                (1, page_size, 1, d),
-                lambda b_, h_, p_, bt, ln: (bt[b_, p_], 0, h_, 0),
-            ),
-            pl.BlockSpec(
-                (1, page_size, 1, d),
-                lambda b_, h_, p_, bt, ln: (bt[b_, p_], 0, h_, 0),
-            ),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, 1, group, d), lambda b_, h_, p_, bt, ln: (b_, h_, 0, 0)
         ),
@@ -176,7 +204,7 @@ def paged_attention_bkgd(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, kvh, group, d), q.dtype),
         interpret=interpret,
-    )(block_tables, lengths, q, k_pages, v_pages)
+    )(block_tables, lengths, *operands)
 
 
 # ---------------------------------------------------------------------------
@@ -188,14 +216,18 @@ def _paged_prefill_kernel(
     bt_ref,    # (MP,) int32 scalar-prefetch: the sequence's block-table row
     meta_ref,  # (2,)  int32 scalar-prefetch: [start, valid]
     q_ref, k_ref, v_ref,  # VMEM blocks
-    o_ref,
-    acc_ref, m_ref, l_ref,  # VMEM scratch
-    *,
+    *rest,     # [ks_ref, vs_ref when quant], o_ref, acc_ref, m_ref, l_ref
     scale: float,
     page_size: int,
     num_logical_pages: int,
     group: int,
+    quant: bool = False,
 ):
+    if quant:
+        ks_ref, vs_ref, o_ref, acc_ref, m_ref, l_ref = rest
+    else:
+        ks_ref = vs_ref = None
+        o_ref, acc_ref, m_ref, l_ref = rest
     p = pl.program_id(1)
     start = meta_ref[0]
     valid = meta_ref[1]
@@ -218,6 +250,10 @@ def _paged_prefill_kernel(
         q = q_ref[0].astype(jnp.float32)        # (C*G, D)
         k = k_ref[0, :, 0].astype(jnp.float32)  # (page, D)
         v = v_ref[0, :, 0].astype(jnp.float32)
+        if quant:
+            # int8 pages: dequant fused into the page load
+            k = k * ks_ref[0, :, 0][:, None]
+            v = v * vs_ref[0, :, 0][:, None]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         ) * scale                               # (C*G, page)
@@ -258,6 +294,8 @@ def paged_prefill_attention_ckgd(
     start: jax.Array,        # scalar int32: positions already cached
     valid: jax.Array,        # scalar int32: real (non-padded) chunk tokens
     *,
+    k_scale: jax.Array | None = None,  # (P, page, KVH) f32 int8-page scales
+    v_scale: jax.Array | None = None,
     scale: float | None = None,
     interpret: bool = False,
 ) -> jax.Array:
@@ -270,6 +308,8 @@ def paged_prefill_attention_ckgd(
     mp = block_table.shape[0]
     scale = scale if scale is not None else d ** -0.5
     cg = c * group
+    quant = k_scale is not None
+    assert quant == (v_scale is not None), "k_scale/v_scale go together"
 
     # (C, KVH, G, D) -> (KVH, C*G, D): all of one kv head's grouped queries
     # become contiguous rows of one matmul operand
@@ -285,22 +325,29 @@ def paged_prefill_attention_ckgd(
         page_size=page_size,
         num_logical_pages=mp,
         group=group,
+        quant=quant,
     )
+    page_spec = pl.BlockSpec(
+        (1, page_size, 1, d),
+        lambda h_, p_, bt, mt: (bt[p_], 0, h_, 0),
+    )
+    in_specs = [
+        pl.BlockSpec((1, cg, d), lambda h_, p_, bt, mt: (h_, 0, 0)),
+        # physical page comes from the prefetched block table
+        page_spec,
+        page_spec,
+    ]
+    operands = [qf, k_pages, v_pages]
+    if quant:
+        scale_spec = pl.BlockSpec(
+            (1, page_size, 1), lambda h_, p_, bt, mt: (bt[p_], 0, h_)
+        )
+        in_specs += [scale_spec, scale_spec]
+        operands += [k_scale, v_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, cg, d), lambda h_, p_, bt, mt: (h_, 0, 0)),
-            # physical page comes from the prefetched block table
-            pl.BlockSpec(
-                (1, page_size, 1, d),
-                lambda h_, p_, bt, mt: (bt[p_], 0, h_, 0),
-            ),
-            pl.BlockSpec(
-                (1, page_size, 1, d),
-                lambda h_, p_, bt, mt: (bt[p_], 0, h_, 0),
-            ),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, cg, d), lambda h_, p_, bt, mt: (h_, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((cg, d), jnp.float32),       # acc
@@ -313,7 +360,7 @@ def paged_prefill_attention_ckgd(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((kvh, cg, d), q.dtype),
         interpret=interpret,
-    )(block_table, meta, qf, k_pages, v_pages)
+    )(block_table, meta, *operands)
     return jnp.transpose(out.reshape(kvh, c, group, d), (1, 0, 2, 3))
 
 
@@ -326,13 +373,17 @@ def _paged_mixed_kernel(
     bt_ref,    # (R, MP) int32 scalar-prefetch: block-table row per query row
     lp_ref,    # (R,)   int32 scalar-prefetch: last attendable position, -1 dead
     q_ref, k_ref, v_ref,  # VMEM blocks
-    o_ref,
-    acc_ref, m_ref, l_ref,  # VMEM scratch
-    *,
+    *rest,     # [ks_ref, vs_ref when quant], o_ref, acc_ref, m_ref, l_ref
     scale: float,
     page_size: int,
     num_logical_pages: int,
+    quant: bool = False,
 ):
+    if quant:
+        ks_ref, vs_ref, o_ref, acc_ref, m_ref, l_ref = rest
+    else:
+        ks_ref = vs_ref = None
+        o_ref, acc_ref, m_ref, l_ref = rest
     r = pl.program_id(0)
     p = pl.program_id(2)
 
@@ -352,6 +403,10 @@ def _paged_mixed_kernel(
         q = q_ref[0, 0].astype(jnp.float32)        # (G, D)
         k = k_ref[0, :, 0].astype(jnp.float32)     # (page, D)
         v = v_ref[0, :, 0].astype(jnp.float32)
+        if quant:
+            # int8 pages: dequant fused into the page load
+            k = k * ks_ref[0, :, 0][:, None]
+            v = v * vs_ref[0, :, 0][:, None]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         ) * scale                                   # (G, page)
@@ -392,6 +447,8 @@ def paged_mixed_attention_rkgd(
     block_tables: jax.Array,  # (R, MP) int32, one block-table row per row
     last_pos: jax.Array,      # (R,) int32 last attendable position, -1 = dead
     *,
+    k_scale: jax.Array | None = None,  # (P, page, KVH) f32 int8-page scales
+    v_scale: jax.Array | None = None,
     scale: float | None = None,
     interpret: bool = False,
 ) -> jax.Array:
@@ -405,6 +462,8 @@ def paged_mixed_attention_rkgd(
     assert pkvh == kvh, (pkvh, kvh)
     mp = block_tables.shape[1]
     scale = scale if scale is not None else d ** -0.5
+    quant = k_scale is not None
+    assert quant == (v_scale is not None), "k_scale/v_scale go together"
 
     grid = (r, kvh, mp)
     kernel = functools.partial(
@@ -412,24 +471,31 @@ def paged_mixed_attention_rkgd(
         scale=scale,
         page_size=page_size,
         num_logical_pages=mp,
+        quant=quant,
     )
+    page_spec = pl.BlockSpec(
+        (1, page_size, 1, d),
+        lambda r_, h_, p_, bt, lp: (bt[r_, p_], 0, h_, 0),
+    )
+    in_specs = [
+        pl.BlockSpec(
+            (1, 1, group, d), lambda r_, h_, p_, bt, lp: (r_, h_, 0, 0)
+        ),
+        # physical page comes from the row's prefetched block table
+        page_spec,
+        page_spec,
+    ]
+    operands = [q, k_pages, v_pages]
+    if quant:
+        scale_spec = pl.BlockSpec(
+            (1, page_size, 1), lambda r_, h_, p_, bt, lp: (bt[r_, p_], 0, h_)
+        )
+        in_specs += [scale_spec, scale_spec]
+        operands += [k_scale, v_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec(
-                (1, 1, group, d), lambda r_, h_, p_, bt, lp: (r_, h_, 0, 0)
-            ),
-            # physical page comes from the row's prefetched block table
-            pl.BlockSpec(
-                (1, page_size, 1, d),
-                lambda r_, h_, p_, bt, lp: (bt[r_, p_], 0, h_, 0),
-            ),
-            pl.BlockSpec(
-                (1, page_size, 1, d),
-                lambda r_, h_, p_, bt, lp: (bt[r_, p_], 0, h_, 0),
-            ),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, 1, group, d), lambda r_, h_, p_, bt, lp: (r_, h_, 0, 0)
         ),
@@ -444,4 +510,4 @@ def paged_mixed_attention_rkgd(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((r, kvh, group, d), q.dtype),
         interpret=interpret,
-    )(block_tables, last_pos, q, k_pages, v_pages)
+    )(block_tables, last_pos, *operands)

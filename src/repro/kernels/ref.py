@@ -133,6 +133,39 @@ def flash_attention_chunked(
 
 
 # ---------------------------------------------------------------------------
+# int8 KV page quantization (tiered cache)
+# ---------------------------------------------------------------------------
+
+
+def quantize_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric int8 quantization over the head_dim (last) axis.
+
+    x (..., D) -> (q int8 (..., D), scale f32 (...,)): one absmax scale per
+    (position, head), so dequantization is a row broadcast the paged kernels
+    fuse into their K/V loads. The worst-case per-element error is scale/2
+    (round-to-nearest over a +/-127 grid) — the quantize->dequant round-trip
+    property in ``tests/test_kernel_fuzz.py`` asserts exactly that bound.
+    """
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)  # all-zero rows quantize to zeros
+    q = jnp.clip(
+        jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127
+    ).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_pages(pages: jax.Array, scales: jax.Array) -> jax.Array:
+    """int8 pages (..., D) * per-row scales (...,) -> f32 pages.
+
+    The XLA fallback for the quantized paged kernels: dequantize the pool,
+    then run the unchanged fp32 oracle — so the fp32 refs stay the single
+    ground truth and the Pallas fused-dequant variants are compared against
+    ``dequantize_pages`` + the existing oracle in the fuzz harness.
+    """
+    return pages.astype(jnp.float32) * scales[..., None]
+
+
+# ---------------------------------------------------------------------------
 # paged attention (single-token decode over a block-table KV pool)
 # ---------------------------------------------------------------------------
 

@@ -23,6 +23,14 @@ step's prefill chunk and every decode slot go down in one mixed dispatch
 the per-dispatch batch composition (decode/prefill/padded rows and the
 fused-dispatch fraction) alongside the occupancy gauges.
 
+With prefix sharing on, the paged engine also runs the tiered KV cache
+(``serving/kv_tiers.py``): finished prompts' prefix pages park in a
+reclaim-under-pressure LRU instead of freeing, optionally spill to host RAM
+(``--host-pages N``) and persist through the artifact store
+(``--persist-dir PATH``) so identical reruns skip their prefill, and
+``--kv-quant int8`` stores pages quantized for ~2x KV capacity per byte.
+The tier gauges and hit counters appear in the utilization line.
+
 The paged engine's executor runs under ``shard_map`` on a ``("model",)``
 mesh; ``--mesh auto`` (default) picks the largest tensor-parallel degree
 the model's head counts allow over the local devices, ``--mesh N`` forces
@@ -80,6 +88,21 @@ def main() -> int:
     ap.add_argument("--token-budget", type=int, default=0,
                     help="paged engine, fused mode: cap decode rows + chunk "
                          "tokens per step (Sarathi-style); 0 disables the cap")
+    ap.add_argument("--kv-quant", default="none", choices=["none", "int8"],
+                    help="paged engine: KV page precision — 'int8' stores "
+                         "pages quantized with per-page-per-head scales "
+                         "(~2x sequences per pool byte; dequantization is "
+                         "fused into the paged attention kernels)")
+    ap.add_argument("--host-pages", type=int, default=0, metavar="N",
+                    help="paged engine: host-RAM spill tier capacity in "
+                         "pages — cold parked prefix pages demote to host "
+                         "buffers and prefetch back on prefix hits; 0 "
+                         "disables the host tier")
+    ap.add_argument("--persist-dir", default=None, metavar="PATH",
+                    help="paged engine: ArtifactStore root for write-through "
+                         "prefix-page persistence — spilled pages survive "
+                         "restarts and re-serve identical prompt prefixes "
+                         "across runs")
     ap.add_argument("--attn-impl", default="auto",
                     choices=["auto", "pallas", "pallas_interpret",
                              "xla_chunked", "naive"],
@@ -188,6 +211,9 @@ def main() -> int:
                 attn_impl=args.attn_impl,
                 step_mode=args.step_mode,
                 token_budget=args.token_budget or None,
+                kv_quant=args.kv_quant,
+                host_pages=args.host_pages,
+                persist_dir=args.persist_dir,
             )
         return GenerationEngine(cfg, params, max_len=max_len,
                                 max_batch=args.max_batch, admission=admission)
@@ -223,6 +249,12 @@ def main() -> int:
         try:
             _worker_loop(engine, stop, handles)
         finally:
+            cache = getattr(engine, "cache", None)
+            if cache is not None and getattr(cache, "tiers", None) is not None:
+                # drain parked prefixes to host/persist so a --persist-dir
+                # rerun of the same prompts revives them across restarts
+                cache.flush_tiers()
+                engine._record_tiers()  # fold the flush into the gauges
             with lock:
                 utilization.merge(engine.utilization)
 

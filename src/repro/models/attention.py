@@ -12,6 +12,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.kernels import ops
+from repro.kernels.ref import quantize_kv
 from repro.models import common
 from repro.models.common import ParamSpec, apply_rope, rms_norm, rope_table
 from repro.parallel import constrain
@@ -139,6 +140,31 @@ def decode_self_attention(
     return o, {"k": kc, "v": vc}
 
 
+def _paged_scatter(
+    layer_pages: dict, k_rows: jax.Array, v_rows: jax.Array,
+    phys: jax.Array, off: jax.Array,
+) -> dict:
+    """Scatter per-row K/V into this layer's page pool (indices (rows,)).
+
+    int8 pools (``k_scale`` present) quantize on the way in — one f32 scale
+    per (row, kv head) over head_dim — and scatter the scales alongside, so
+    the paged kernels can fuse the dequant. Out-of-bounds rows are dropped
+    for values and scales alike."""
+    out = dict(layer_pages)
+    if "k_scale" in layer_pages:
+        k_rows, k_sc = quantize_kv(k_rows)
+        v_rows, v_sc = quantize_kv(v_rows)
+        out["k_scale"] = layer_pages["k_scale"].at[phys, off].set(
+            k_sc, mode="drop")
+        out["v_scale"] = layer_pages["v_scale"].at[phys, off].set(
+            v_sc, mode="drop")
+    out["k"] = layer_pages["k"].at[phys, off].set(
+        k_rows.astype(layer_pages["k"].dtype), mode="drop")
+    out["v"] = layer_pages["v"].at[phys, off].set(
+        v_rows.astype(layer_pages["v"].dtype), mode="drop")
+    return out
+
+
 def decode_self_attention_paged(
     p: dict,
     x: jax.Array,            # (S, 1, D) one token per in-flight slot
@@ -164,14 +190,10 @@ def decode_self_attention_paged(
     # update order is well-defined (duplicate-index scatter is not)
     phys = jnp.where(phys == 0, num_pages, phys)
     off = lengths % page
-    kc = layer_pages["k"].at[phys, off].set(
-        k[:, 0].astype(layer_pages["k"].dtype), mode="drop"
-    )
-    vc = layer_pages["v"].at[phys, off].set(
-        v[:, 0].astype(layer_pages["v"].dtype), mode="drop"
-    )
+    cache = _paged_scatter(layer_pages, k[:, 0], v[:, 0], phys, off)
     out = ops.paged_attention(
-        q[:, 0], kc, vc, block_tables, lengths + 1,
+        q[:, 0], cache["k"], cache["v"], block_tables, lengths + 1,
+        k_scale=cache.get("k_scale"), v_scale=cache.get("v_scale"),
         scale=cfg.head_dim ** -0.5, impl=attn_impl,
     ).astype(x.dtype)  # (S, H_local, Dh)
     # under the serving executor's shard_map, q/kv heads and the page pool
@@ -179,7 +201,7 @@ def decode_self_attention_paged(
     # own KV shard (block tables are replicated), and the row-parallel wo
     # partial sums are reduced here
     o = psum_tp(jnp.einsum("bhk,hkd->bd", out, p["wo"]))[:, None, :]
-    return o, {"k": kc, "v": vc}
+    return o, cache
 
 
 def prefill_chunk_attention_paged(
@@ -214,18 +236,14 @@ def prefill_chunk_attention_paged(
         jnp.arange(c) < valid, block_table[positions // page], num_pages
     )
     off = positions % page
-    kc = layer_pages["k"].at[phys, off].set(
-        k[0].astype(layer_pages["k"].dtype), mode="drop"
-    )
-    vc = layer_pages["v"].at[phys, off].set(
-        v[0].astype(layer_pages["v"].dtype), mode="drop"
-    )
+    cache = _paged_scatter(layer_pages, k[0], v[0], phys, off)
     out = ops.paged_prefill_attention(
-        q[0], kc, vc, block_table, start, valid,
+        q[0], cache["k"], cache["v"], block_table, start, valid,
+        k_scale=cache.get("k_scale"), v_scale=cache.get("v_scale"),
         scale=cfg.head_dim ** -0.5, impl=attn_impl,
     ).astype(x.dtype)  # (C, H_local, Dh)
     o = psum_tp(jnp.einsum("chk,hkd->cd", out, p["wo"]))[None]
-    return o, {"k": kc, "v": vc}
+    return o, cache
 
 
 def mixed_step_attention_paged(
@@ -276,20 +294,16 @@ def mixed_step_attention_paged(
     # dead rows and null-page entries write out of bounds and are DROPPED
     phys = jnp.where(live & (phys != 0), phys, num_pages)
     off = pos % page
-    kc = layer_pages["k"].at[phys, off].set(
-        k[:, 0].astype(layer_pages["k"].dtype), mode="drop"
-    )
-    vc = layer_pages["v"].at[phys, off].set(
-        v[:, 0].astype(layer_pages["v"].dtype), mode="drop"
-    )
+    cache = _paged_scatter(layer_pages, k[:, 0], v[:, 0], phys, off)
     out = ops.paged_mixed_attention(
-        q[:, 0], kc, vc, block_tables, positions,
+        q[:, 0], cache["k"], cache["v"], block_tables, positions,
+        k_scale=cache.get("k_scale"), v_scale=cache.get("v_scale"),
         scale=cfg.head_dim ** -0.5, impl=attn_impl, num_decode=num_decode,
     ).astype(x.dtype)  # (R, H_local, Dh)
     # same sharding contract as decode: per-shard head slice of q/kv and the
     # page pool, tables/positions replicated, row-parallel wo reduced here
     o = psum_tp(jnp.einsum("bhk,hkd->bd", out, p["wo"]))[:, None, :]
-    return o, {"k": kc, "v": vc}
+    return o, cache
 
 
 def cross_attention(

@@ -640,7 +640,7 @@ class DecoderLM:
             return x + h, new_cl
 
         x, new_pages = jax.lax.scan(
-            body, x, (params["layers"], {"k": pages["k"], "v": pages["v"]})
+            body, x, (params["layers"], dict(pages))
         )
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
         # column-parallel unembed under TP serving: gather the vocab shards
@@ -692,7 +692,7 @@ class DecoderLM:
             return x + h, new_cl
 
         x, new_pages = jax.lax.scan(
-            body, x, (params["layers"], {"k": pages["k"], "v": pages["v"]})
+            body, x, (params["layers"], dict(pages))
         )
         # decode rows + the chunk's sampling row, then ONE unembed
         xc = jax.lax.dynamic_slice_in_dim(
@@ -753,7 +753,7 @@ class DecoderLM:
             return x + h, new_cl
 
         x, new_pages = jax.lax.scan(
-            body, x, (params["layers"], {"k": pages["k"], "v": pages["v"]})
+            body, x, (params["layers"], dict(pages))
         )
         x = jax.lax.dynamic_slice_in_dim(x, valid - 1, 1, axis=1)
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)

@@ -9,7 +9,9 @@ micro-batching baseline; ``ContinuousBatchingEngine`` is the production path
 copy-on-write prefix sharing (see ``docs/serving.md`` for the full design).
 ``repro.serving.fleet`` supervises N engine workers behind the bus —
 probes, crash-replay recovery, autoscaling (paper §3.5 fused with the
-serving arc).
+serving arc). ``repro.serving.kv_tiers`` keeps prefix KV pages alive past
+release — parked on device, spilled to host RAM, persisted to an
+ArtifactStore — with async prefetch back on prefix hits.
 """
 
 from repro.serving.api import (
@@ -34,6 +36,7 @@ from repro.serving.fleet import (
     fleet_seed,
 )
 from repro.serving.kv_cache import PagedKVCache, PagePool
+from repro.serving.kv_tiers import KVTierManager
 from repro.serving.metrics import FleetMetrics, format_latency, latency_percentiles
 
 __all__ = [
@@ -48,6 +51,7 @@ __all__ = [
     "FleetMetrics",
     "FleetSupervisor",
     "GenerationEngine",
+    "KVTierManager",
     "PagedKVCache",
     "PagePool",
     "PriorityAdmission",

@@ -64,8 +64,10 @@ from repro.serving.api import (
     StreamEvent,
     validate_request,
 )
+from repro.core.storage import ArtifactStore
 from repro.serving.executor import ModelExecutor
 from repro.serving.kv_cache import PagedKVCache, cdiv
+from repro.serving.kv_tiers import KVTierManager
 from repro.serving.metrics import UtilizationMetrics
 from repro.serving.scheduler import Scheduler, Sequence
 
@@ -269,6 +271,15 @@ class ContinuousBatchingEngine(EngineBase):
     Sequences finish independently — their page refcounts drop (pages
     return to the pool at zero) and the slot is refilled from the waiting
     queue on the next step.
+
+    With prefix sharing on, a :class:`~repro.serving.kv_tiers.KVTierManager`
+    (``kv_tiers``; default follows ``prefix_sharing``) parks released
+    prefix pages instead of freeing them, reclaiming them lazily under pool
+    pressure; ``host_pages``/``persist_dir`` add host-RAM and
+    ArtifactStore-backed spill tiers with async prefetch on prefix hits.
+    ``kv_quant="int8"`` stores KV pages quantized per page per head, with
+    dequantization fused into the paged attention kernels — roughly halving
+    page bytes at equal pool capacity.
     """
 
     def __init__(
@@ -288,6 +299,10 @@ class ContinuousBatchingEngine(EngineBase):
         max_preemptions: int | None = None,
         step_mode: str = "fused",
         token_budget: int | None = None,
+        kv_quant: str = "none",
+        kv_tiers: bool | None = None,
+        host_pages: int = 0,
+        persist_dir: str | None = None,
     ):
         assert not cfg.is_encoder_decoder, "paged engine is decoder-only"
         assert cfg.family in ("dense", "moe", "vlm"), (
@@ -315,6 +330,23 @@ class ContinuousBatchingEngine(EngineBase):
             raise ValueError(f"token_budget must be >= 1, got {token_budget}")
         self.step_mode = step_mode
         self.token_budget = token_budget
+        if kv_quant not in ("none", "int8"):
+            raise ValueError(
+                f"kv_quant must be 'none' or 'int8', got {kv_quant!r}"
+            )
+        # tiers default to on whenever the prefix index exists to park into
+        # (kv_tiers=False forces them off for A/B runs; host/persist tiers
+        # only engage when host_pages / persist_dir are set)
+        if kv_tiers is None:
+            kv_tiers = self.prefix_sharing
+        self.tiers = (
+            KVTierManager(
+                host_pages=host_pages,
+                store=(ArtifactStore(persist_dir)
+                       if persist_dir is not None else None),
+            )
+            if kv_tiers and self.prefix_sharing else None
+        )
         self.cache = PagedKVCache(
             num_layers=cfg.num_layers,
             num_kv_heads=cfg.eff_kv_heads,
@@ -324,6 +356,8 @@ class ContinuousBatchingEngine(EngineBase):
             max_context=max_len,
             page_size=page_size,
             num_pages=num_pages,
+            quant=kv_quant,
+            tiers=self.tiers,
         )
         self.scheduler = Scheduler(
             self.cache,
@@ -483,8 +517,19 @@ class ContinuousBatchingEngine(EngineBase):
                 self._first_token(chunk.slot, chunk.seq, ctok)
         return toks
 
+    def _record_tiers(self) -> None:
+        if self.tiers is not None:
+            t = self.tiers
+            self.utilization.record_tiers(
+                parked=t.parked_count, host=t.host_count,
+                persisted=t.persisted_count, counters=t.counters,
+            )
+
     def _step_fused(self) -> list[StreamEvent]:
         sched = self.scheduler
+        # publish last step's prefetched pages BEFORE admission matches
+        # against the prefix index (pending pages stay invisible one step)
+        self.cache.tick_tiers()
         self._admit()
         # with no decode in flight there is no stall to bound, so drain
         # chunk-only plans back-to-back until a sequence becomes decodable
@@ -508,6 +553,7 @@ class ContinuousBatchingEngine(EngineBase):
         used, total = sched.page_utilization()
         self.utilization.record(active=decoding, slots=slots,
                                 pages_used=used, pages_total=total)
+        self._record_tiers()
         plan = sched.build_step_plan()
         toks = self._dispatch_plan(plan)
         self.stats["decode_steps"] += 1
@@ -520,12 +566,14 @@ class ContinuousBatchingEngine(EngineBase):
             sched.append_decoded(slot, tok)
             if self._deliver(seq.handle, tok, len(seq.tokens) - 1, now):
                 sched.release(slot)
+        self._record_tiers()  # post-release: captures end-of-life parking
         return self._drain_events()
 
     def _step_interleaved(self) -> list[StreamEvent]:
         """Pre-fusion step: one chunk dispatch interleaved with one decode
         dispatch (kept for A/B against the fused step)."""
         sched = self.scheduler
+        self.cache.tick_tiers()
         self._admit()
         ran = self._prefill_step()
         # the one-chunk-per-step cap exists to bound decode stalls; with no
@@ -547,6 +595,7 @@ class ContinuousBatchingEngine(EngineBase):
         used, total = sched.page_utilization()
         self.utilization.record(active=decoding, slots=slots,
                                 pages_used=used, pages_total=total)
+        self._record_tiers()
         self._record_batch(decoding, 0, self.max_slots, fused=False)
         inputs = sched.build_decode_inputs() if sched.dirty else None
         toks = self.executor.decode(inputs)
@@ -557,4 +606,5 @@ class ContinuousBatchingEngine(EngineBase):
             sched.append_decoded(slot, tok)
             if self._deliver(seq.handle, tok, len(seq.tokens) - 1, now):
                 sched.release(slot)
+        self._record_tiers()  # post-release: captures end-of-life parking
         return self._drain_events()

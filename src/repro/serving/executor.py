@@ -12,8 +12,9 @@ Megatron-style tensor parallelism:
   ``all_gather_logits`` (both marked inside the model code,
   identity when unsharded);
 * the KV page pool is sharded along its **head** dimension
-  (``(L, P, page, KVH, Dh)`` -> ``P(None, None, None, "model", None)``),
-  so every shard holds the SAME pages for its slice of heads — block
+  (``(L, P, page, KVH, Dh)`` -> ``P(None, None, None, "model", None)``;
+  int8 pools add per-page scale arrays sharded the same way minus the
+  ``Dh`` axis), so every shard holds the SAME pages for its slice of heads — block
   tables, page ids, refcounts and the prefix index stay single host-side
   structures in the :class:`~repro.serving.scheduler.Scheduler`;
 * everything the host feeds per step (block tables, lengths, tokens,
@@ -66,6 +67,9 @@ __all__ = [
 # (L, P, page, KVH, Dh): only the head dim is sharded, so page ids and
 # block-table entries mean the same thing on every shard
 PAGE_SPEC = P(None, None, None, "model", None)
+# int8 pools carry per-page-per-head scale arrays (L, P, page, KVH) — same
+# head sharding, no Dh axis
+SCALE_SPEC = P(None, None, None, "model")
 
 _DEFAULT_MESH: Mesh | None = None
 
@@ -240,8 +244,18 @@ class ModelExecutor:
             lambda arr, spec: jax.device_put(arr, ns(spec)),
             params, self.param_specs,
         )
-        self.cache._reshard(ns(PAGE_SPEC))
+        self.cache._reshard(
+            {key: ns(spec) for key, spec in self._page_specs().items()}
+        )
         return placed
+
+    def _page_specs(self) -> dict:
+        """Per-array PartitionSpecs for the cache's page dict (scale arrays
+        drop the Dh axis but shard the same head dim)."""
+        return {
+            key: PAGE_SPEC if arr.ndim == 5 else SCALE_SPEC
+            for key, arr in self.cache.pages.items()
+        }
 
     def _smap(self, fn, in_specs, out_specs):
         return shard_map_unchecked(
@@ -293,7 +307,7 @@ class ModelExecutor:
                 di = di.at[:, mp + 5].add(active)
                 return pages, di, toks
 
-            page_specs = {"k": PAGE_SPEC, "v": PAGE_SPEC}
+            page_specs = self._page_specs()
             smapped = self._smap(
                 fn,
                 in_specs=(self.param_specs, page_specs) + (P(),) * 2,
@@ -331,10 +345,10 @@ class ModelExecutor:
         Returns the sampled token per slot, (S,) int32 on the host."""
         if inputs is not None:
             self.refresh(inputs)
-        pages = {"k": self.cache.k_pages, "v": self.cache.v_pages}
+        pages = dict(self.cache.pages)
         fn = self._decode_fn(self._greedy_only)
         pages, self._di, toks = fn(self.params, pages, self._di, self._df)
-        self.cache.set_pages(pages["k"], pages["v"])
+        self.cache.swap_pages(pages)
         return np.asarray(toks)
 
     # ------------------------------------------------------------------
@@ -418,7 +432,7 @@ class ModelExecutor:
                 di = di.at[:, mp + 5].add(active)
                 return pages, di, dtoks, toks[s]
 
-            page_specs = {"k": PAGE_SPEC, "v": PAGE_SPEC}
+            page_specs = self._page_specs()
             smapped = self._smap(
                 fn,
                 in_specs=(self.param_specs, page_specs) + (P(),) * 4,
@@ -450,11 +464,11 @@ class ModelExecutor:
         sp = chunk.seq.request.sampling
         fn = self._mixed_fn(self._greedy_only and sp.temperature <= 0.0)
         ci, cf = self._pack_chunk(chunk)
-        pages = {"k": self.cache.k_pages, "v": self.cache.v_pages}
+        pages = dict(self.cache.pages)
         pages, self._di, toks, ctok = fn(
             self.params, pages, self._di, self._df, ci, cf
         )
-        self.cache.set_pages(pages["k"], pages["v"])
+        self.cache.swap_pages(pages)
         return np.asarray(toks), int(ctok)
 
     # ------------------------------------------------------------------
@@ -472,39 +486,38 @@ class ModelExecutor:
         if self._chunk_fn is None:
             mp = self.cache.block_tables.shape[1]
 
-            def fn(params, k_pages, v_pages, ci, cf):
+            def fn(params, pages, ci, cf):
                 c = ci.shape[0] - mp - 4
                 row, tokens = ci[:mp], ci[mp:mp + c]
                 start, valid = ci[mp + c], ci[mp + c + 1]
                 with self._tp_ctx():
                     pages, logits = self.model.prefill_chunk(
-                        params, {"k": k_pages, "v": v_pages}, row, tokens,
-                        start, valid,
+                        params, pages, row, tokens, start, valid,
                     )
                     tok = sample_tokens(
                         logits[None], cf[0][None], ci[mp + c + 2][None],
                         cf[1][None], ci[mp + c + 3][None],
                         jnp.zeros((1,), jnp.int32), self.cfg.vocab_size,
                     )
-                return pages["k"], pages["v"], tok[0]
+                return pages, tok[0]
 
+            page_specs = self._page_specs()
             smapped = self._smap(
                 fn,
-                in_specs=(self.param_specs, PAGE_SPEC, PAGE_SPEC)
-                + (P(),) * 2,
-                out_specs=(PAGE_SPEC, PAGE_SPEC, P()),
+                in_specs=(self.param_specs, page_specs) + (P(),) * 2,
+                out_specs=(page_specs, P()),
             )
-            self._chunk_fn = jax.jit(smapped, donate_argnums=(1, 2))
+            self._chunk_fn = jax.jit(smapped, donate_argnums=(1,))
         return self._chunk_fn
 
     def prefill_chunk(self, work: PrefillChunk) -> int:
         """Dispatch one chunk; returns the sampled first token (meaningful
         only when this was the prompt's final chunk)."""
         ci, cf = self._pack_chunk(work)
-        k_pages, v_pages, tok = self._chunk_prefill_fn()(
-            self.params, self.cache.k_pages, self.cache.v_pages, ci, cf
+        pages, tok = self._chunk_prefill_fn()(
+            self.params, dict(self.cache.pages), ci, cf
         )
-        self.cache.set_pages(k_pages, v_pages)
+        self.cache.swap_pages(pages)
         return int(tok)
 
     # ------------------------------------------------------------------
@@ -523,7 +536,7 @@ class ModelExecutor:
         if bucket not in self._prefill_fns:
             s_total = self.nf + bucket
 
-            def fn(params, batch, idx, k_pages, v_pages, row, valid_len,
+            def fn(params, batch, idx, pages, row, valid_len,
                    temp, tk, tp, rseed):
                 with self._tp_ctx():
                     cache, logits = self.model.prefill(
@@ -532,24 +545,25 @@ class ModelExecutor:
                     # cache["k"] is (L, 1, S, KVH/tp, Dh): the local head
                     # slice scatters into the local page shard — positions
                     # and page ids are shard-invariant
-                    k_pages, v_pages = write_prefill_pages(
-                        k_pages, v_pages, cache["k"][:, 0], cache["v"][:, 0],
+                    pages = write_prefill_pages(
+                        pages, cache["k"][:, 0], cache["v"][:, 0],
                         row, valid_len,
                     )
                     tok = sample_tokens(
                         logits, temp[None], tk[None], tp[None], rseed[None],
                         jnp.zeros((1,), jnp.int32), self.cfg.vocab_size,
                     )
-                return k_pages, v_pages, tok[0]
+                return pages, tok[0]
 
+            page_specs = self._page_specs()
             smapped = self._smap(
                 fn,
-                in_specs=(self.param_specs, P(), P(), PAGE_SPEC, PAGE_SPEC)
+                in_specs=(self.param_specs, P(), P(), page_specs)
                 + (P(),) * 6,
-                out_specs=(PAGE_SPEC, PAGE_SPEC, P()),
+                out_specs=(page_specs, P()),
             )
             self._prefill_fns[bucket] = jax.jit(
-                smapped, donate_argnums=(3, 4)
+                smapped, donate_argnums=(3,)
             )
         return self._prefill_fns[bucket]
 
@@ -566,9 +580,9 @@ class ModelExecutor:
                 (1, self.nf, self.cfg.d_model), jnp.dtype(self.cfg.dtype)
             )
         sp = request.sampling
-        k_pages, v_pages, tok = self._prefill_fn(bucket)(
+        pages, tok = self._prefill_fn(bucket)(
             self.params, batch, jnp.asarray(ctx - 1, jnp.int32),
-            self.cache.k_pages, self.cache.v_pages,
+            dict(self.cache.pages),
             self.cache.device_row(slot),
             jnp.asarray(ctx, jnp.int32),
             jnp.asarray(sp.temperature, jnp.float32),
@@ -576,5 +590,5 @@ class ModelExecutor:
             jnp.asarray(sp.top_p, jnp.float32),
             jnp.asarray(seed, jnp.int32),
         )
-        self.cache.set_pages(k_pages, v_pages)
+        self.cache.swap_pages(pages)
         return int(tok)

@@ -1,9 +1,11 @@
 """Block-table KV cache: refcounted pages with prefix sharing + copy-on-write.
 
-The device side is two arrays per model — ``k_pages``/``v_pages`` of shape
-(L, P, page_size, KVH, Dh) — plus per-step int32 inputs (block tables and
-lengths), so the jitted decode step sees ONE static shape no matter how many
-sequences are in flight or how long each one is. The host side is a
+The device side is a dict of page-pool arrays per model — ``pages["k"]`` /
+``pages["v"]`` of shape (L, P, page_size, KVH, Dh), plus per-(position, head)
+``pages["k_scale"]`` / ``pages["v_scale"]`` of shape (L, P, page_size, KVH)
+when the pool is int8-quantized — plus per-step int32 inputs (block tables
+and lengths), so the jitted decode step sees ONE static shape no matter how
+many sequences are in flight or how long each one is. The host side is a
 refcounted free-list allocator (:class:`PagePool`) and per-slot bookkeeping
 (:class:`PagedKVCache`) that hands the engine ready-to-transfer block tables.
 
@@ -20,7 +22,7 @@ Page 0 is reserved as the **null page**: unused block-table entries and idle
 decode slots point at it, so the kernel's gathers never go out of bounds and
 idle-slot writes land in a sink nobody reads (reads are masked by length).
 
-Sharing model (this PR):
+Sharing model:
 
 * Every page carries a **refcount**. A page is physically freed (returned to
   the free list) only when its refcount reaches zero, so two sequences can
@@ -41,6 +43,17 @@ Sharing model (this PR):
   sharing restricted to full pages this only triggers after :meth:`fork`,
   which maps *all* of a sequence's pages — including the partial tail —
   into a second slot.
+* **Tiers** (:mod:`repro.serving.kv_tiers`, optional): with a
+  :class:`~repro.serving.kv_tiers.KVTierManager` attached, a prefix-index
+  page whose last reference drops is **parked** (refcount 0, device-resident,
+  still matchable) instead of freed, and :meth:`reclaim_parked` — invoked
+  from :meth:`can_admit` / the allocation path before admission fails or
+  preemption fires — spills the LRU parked pages to host RAM / an
+  ``ArtifactStore`` and returns them to the free list. A prefix-index walk
+  past device residency asynchronously prefetches spilled pages back
+  (:meth:`match_prefix` with ``prefetch=True``); the engine publishes the
+  transfers one step later via :meth:`tick_tiers`. See the state-machine
+  diagram in ``kv_tiers.py``.
 
 Pages are registered into the prefix index by the engine *after* the prefill
 chunk that fills them has been dispatched (dispatch order = execution order
@@ -51,10 +64,14 @@ page before its contents exist.
 from __future__ import annotations
 
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.kernels.ref import dequantize_pages, quantize_kv
+from repro.serving.kv_tiers import KVTierManager, chain_key
 
 NULL_PAGE = 0
 
@@ -68,6 +85,13 @@ class PagePool:
 
     ``alloc`` hands out pages with refcount 1; ``incref`` adds a sharer;
     ``decref`` returns the page to the free list when the count hits zero.
+
+    Tiered caches add a third state between live and free: ``park`` drops a
+    page to refcount 0 WITHOUT returning it to the free list (the page stays
+    device-resident and matchable), ``revive`` claims a parked page back to
+    refcount 1, and ``reclaim`` finally free-lists a parked page. The owner
+    (:class:`PagedKVCache`) tracks WHICH pages are parked; the pool only
+    enforces the refcount transitions.
     """
 
     def __init__(self, num_pages: int):
@@ -112,15 +136,38 @@ class PagePool:
         for p in pages:
             self.decref(p)
 
+    # -- parked-tier transitions (refcount 0, NOT on the free list) --------
+    def park(self, page: int) -> None:
+        assert page != NULL_PAGE and self.refcounts[page] == 1, page
+        self.refcounts[page] = 0
 
-@functools.partial(jax.jit, donate_argnums=(0, 1))
-def _copy_page(k_pages, v_pages, src, dst):
-    """Copy one physical page (all layers) src -> dst, in place (donated)."""
-    ks = jax.lax.dynamic_slice_in_dim(k_pages, src, 1, axis=1)
-    vs = jax.lax.dynamic_slice_in_dim(v_pages, src, 1, axis=1)
-    k_pages = jax.lax.dynamic_update_slice_in_dim(k_pages, ks, dst, axis=1)
-    v_pages = jax.lax.dynamic_update_slice_in_dim(v_pages, vs, dst, axis=1)
-    return k_pages, v_pages
+    def revive(self, page: int) -> None:
+        assert page != NULL_PAGE and self.refcounts[page] == 0, page
+        self.refcounts[page] = 1
+
+    def reclaim(self, page: int) -> None:
+        assert self.refcounts[page] == 0, page
+        self._free.append(page)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _copy_page(pages, src, dst):
+    """Copy one physical page (all layers, every pool array — K, V and any
+    quantization scales) src -> dst, in place (donated)."""
+    def cp(arr):
+        blk = jax.lax.dynamic_slice_in_dim(arr, src, 1, axis=1)
+        return jax.lax.dynamic_update_slice_in_dim(arr, blk, dst, axis=1)
+    return {key: cp(arr) for key, arr in pages.items()}
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _write_page(arr, page, data):
+    """Write one physical page (all layers) from a host block, in place.
+
+    The page dim (axis 1) is never sharded, so the update preserves the
+    kv-head sharding; dispatch is async, which is what makes tier prefetch
+    overlap the step that triggered it."""
+    return jax.lax.dynamic_update_slice_in_dim(arr, data, page, axis=1)
 
 
 class PagedKVCache:
@@ -129,7 +176,13 @@ class PagedKVCache:
     The engine owns the jitted functions; this class owns allocation state
     (slots, refcounts, the prefix index) and the current device arrays
     (which the engine swaps after each donated decode/prefill-write call via
-    :meth:`set_pages`).
+    :meth:`swap_pages`).
+
+    ``quant="int8"`` stores K/V as int8 with one f32 scale per
+    (page, position, kv head) in ``pages["k_scale"]``/``pages["v_scale"]``
+    — ~4x more pages per HBM byte; the paged kernels fuse the dequant.
+    ``tiers`` attaches a :class:`~repro.serving.kv_tiers.KVTierManager`
+    (see module docstring).
     """
 
     def __init__(
@@ -143,16 +196,27 @@ class PagedKVCache:
         max_context: int,
         page_size: int = 16,
         num_pages: int | None = None,
+        quant: str = "none",
+        tiers: KVTierManager | None = None,
     ):
+        assert quant in ("none", "int8"), quant
         self.page_size = page_size
         self.max_slots = max_slots
         self.max_pages_per_seq = cdiv(max_context, page_size)
         if num_pages is None:  # worst case: every slot at max context, + null
             num_pages = max_slots * self.max_pages_per_seq + 1
         self.num_pages = num_pages
+        self.quant = quant
+        self.tiers = tiers
         shape = (num_layers, num_pages, page_size, num_kv_heads, head_dim)
-        self.k_pages = jnp.zeros(shape, dtype)
-        self.v_pages = jnp.zeros(shape, dtype)
+        store_dtype = jnp.int8 if quant == "int8" else dtype
+        self.pages: dict[str, jax.Array] = {
+            "k": jnp.zeros(shape, store_dtype),
+            "v": jnp.zeros(shape, store_dtype),
+        }
+        if quant == "int8":
+            self.pages["k_scale"] = jnp.zeros(shape[:-1], jnp.float32)
+            self.pages["v_scale"] = jnp.zeros(shape[:-1], jnp.float32)
 
         self.pool = PagePool(num_pages)
         self.block_tables = np.full(
@@ -164,6 +228,9 @@ class PagedKVCache:
         # prefix index: (parent physical page, token chunk) -> physical page
         self._prefix_index: dict[tuple, int] = {}
         self._page_key: dict[int, tuple] = {}  # reverse map for dereg on free
+        # content key per indexed page (kv_tiers.chain_key): names the prefix
+        # by token content, so it survives spill/reload and page-id reuse
+        self._page_ck: dict[int, bytes] = {}
         self.stats = {"prefix_hits": 0, "prefix_tokens_reused": 0,
                       "cow_copies": 0}
 
@@ -176,7 +243,7 @@ class PagedKVCache:
         into a shared page (see module docstring)."""
         return max(0, (len(tokens) - 1) // self.page_size)
 
-    def match_prefix(self, tokens) -> tuple[list[int], int]:
+    def match_prefix(self, tokens, prefetch: bool = False) -> tuple[list[int], int]:
         """Longest chain of registered full pages matching ``tokens``.
 
         Keys are hash-chained, (parent physical page, this page's token
@@ -186,21 +253,96 @@ class PagedKVCache:
         parent (prefix structure), so a parent entry can never be freed
         (and its id recycled) while a child entry survives.
 
-        Returns (pages, matched_token_count). Read-only: the caller
-        (:meth:`admit`) takes the references.
+        Tier semantics: prefetch-PENDING pages (host→device copy dispatched
+        this step, published next step by :meth:`tick_tiers`) count as a
+        miss, so an admission never maps a page whose transfer it cannot
+        know has landed. With ``prefetch=True`` (the :meth:`can_admit`
+        path only), a walk that runs past device residency looks the next
+        chunks up by content key in the host/persisted tiers and dispatches
+        their uploads — the triggering request then waits a step (deferred
+        admission) without blocking anyone else.
+
+        Returns (pages, matched_token_count). Aside from prefetch, read
+        only: the caller (:meth:`admit`) takes the references.
         """
         ps = self.page_size
+        tiers = self.tiers
         pages: list[int] = []
         parent = NULL_PAGE
-        for i in range(self._prefix_limit(tokens)):
+        limit = self._prefix_limit(tokens)
+        for i in range(limit):
             page = self._prefix_index.get(
                 (parent, tuple(tokens[i * ps:(i + 1) * ps]))
             )
-            if page is None:
+            if page is None or (tiers is not None and page in tiers.pending):
                 break
             pages.append(page)
             parent = page
+        if tiers is not None:
+            for p in pages:  # matched parked pages move to the MRU end
+                tiers.touch(p)
+            if prefetch:
+                self._prefetch_chain(pages, tokens, limit)
         return pages, len(pages) * ps
+
+    def _prefetch_chain(self, matched: list[int], tokens, limit: int) -> None:
+        """Extend a device-resident prefix from the host/persisted tiers.
+
+        Each hit allocates a device page, dispatches the upload (async),
+        registers the page in the prefix index and parks it PENDING. The
+        walk stops at the first tier miss, at a page some other query is
+        already prefetching, or when taking one more page would leave the
+        pool unable to cover the rest of this prompt (prefetch must never
+        starve the admission it serves)."""
+        tiers = self.tiers
+        ps = self.page_size
+        i = len(matched)
+        parent = matched[-1] if matched else NULL_PAGE
+        parent_ck = self._page_ck.get(parent, b"")
+        total = cdiv(len(tokens), ps)
+        while i < limit:
+            chunk = tuple(tokens[i * ps:(i + 1) * ps])
+            if (parent, chunk) in self._prefix_index:
+                break  # already resident (pending from an earlier query)
+            if self.pool.available < total - i:
+                break
+            ck = chain_key(parent_ck, chunk)
+            arrays = tiers.lookup(ck)
+            if arrays is None:
+                break
+            t0 = time.perf_counter()
+            (page,) = self.pool.alloc(1)
+            self._upload_page(page, arrays)
+            self.pool.park(page)
+            key = (parent, chunk)
+            self._prefix_index[key] = page
+            self._page_key[page] = key
+            self._page_ck[page] = ck
+            tiers.park(page, ck)
+            tiers.pending.add(page)
+            tiers.counters["prefetched_pages"] += 1
+            tiers.counters["prefetch_bytes"] += sum(
+                a.nbytes for a in arrays.values()
+            )
+            tiers.counters["prefetch_s"] += time.perf_counter() - t0
+            parent, parent_ck = page, ck
+            i += 1
+
+    def _next_is_pending(self, matched: list[int], tokens) -> bool:
+        """True when the first chunk past the device match maps to a page
+        whose prefetch is still pending — the caller should defer admission
+        one step instead of re-prefilling a prefix that is already in flight."""
+        if self.tiers is None:
+            return False
+        i = len(matched)
+        if i >= self._prefix_limit(tokens):
+            return False
+        ps = self.page_size
+        parent = matched[-1] if matched else NULL_PAGE
+        page = self._prefix_index.get(
+            (parent, tuple(tokens[i * ps:(i + 1) * ps]))
+        )
+        return page is not None and page in self.tiers.pending
 
     def register_prefix(self, slot: int, tokens, upto: int) -> None:
         """Publish ``slot``'s full pages covering ``tokens[:upto]`` into the
@@ -215,18 +357,114 @@ class PagedKVCache:
         one — and admission deferral makes that window rare."""
         ps = self.page_size
         parent = NULL_PAGE
+        parent_ck = b""
         for i in range(min(upto, len(tokens)) // ps):
-            key = (parent, tuple(tokens[i * ps:(i + 1) * ps]))
+            chunk = tuple(tokens[i * ps:(i + 1) * ps])
+            key = (parent, chunk)
             page = self._slot_pages[slot][i]
             if key not in self._prefix_index:
                 self._prefix_index[key] = page
                 self._page_key[page] = key
+                if self.tiers is not None:
+                    self._page_ck[page] = chain_key(parent_ck, chunk)
             parent = page
+            if self.tiers is not None:
+                parent_ck = chain_key(parent_ck, chunk)
 
     def _deregister(self, page: int) -> None:
         key = self._page_key.pop(page, None)
         if key is not None:
             del self._prefix_index[key]
+        self._page_ck.pop(page, None)
+
+    # ------------------------------------------------------------------
+    # tiers: park / reclaim / prefetch plumbing
+    # ------------------------------------------------------------------
+    def _drop_ref(self, page: int) -> None:
+        """Drop one reference; a prefix-index page whose LAST reference
+        drops is parked (tiers on) instead of freed, so a later rerun of
+        the same prompt still matches it."""
+        if (self.tiers is not None and page in self._page_key
+                and self.pool.refcounts[page] == 1):
+            self.pool.park(page)
+            self.tiers.park(page, self._page_ck[page])
+        elif self.pool.decref(page):
+            self._deregister(page)
+
+    def _alloc(self, n: int) -> list[int]:
+        """``pool.alloc`` that reclaims parked pages under pressure first."""
+        if self.tiers is not None and self.pool.available < n:
+            self.reclaim_parked(n - self.pool.available)
+        return self.pool.alloc(n)
+
+    def reclaim_parked(self, n: int, protect=()) -> int:
+        """Spill and free at least ``n`` parked pages (LRU first); returns
+        how many were actually freed (0 when the tier is off or empty).
+
+        Freeing a page whose id is a prefix-index *parent* would let the id
+        recycle under surviving child entries (an ABA wrong-match), and a
+        child whose parent left the index is unreachable anyway — so each
+        reclaim cascades over the page's index descendants. Descendants of
+        a parked page are provably parked too (any live holder of a child
+        also holds the parent), so the cascade never touches a live slot.
+        Contents are spilled to the host/persisted tiers before the device
+        page is reused; content keys keep the spilled chain matchable."""
+        if self.tiers is None or n <= 0:
+            return 0
+        tiers = self.tiers
+        protect = set(protect)
+        freed = 0
+        while freed < n:
+            got = tiers.pop_lru(protect)
+            if got is None:
+                break
+            batch = [got]
+            i = 0
+            while i < len(batch):  # gather index descendants (all parked)
+                parent_page = batch[i][0]
+                i += 1
+                for child, key in list(self._page_key.items()):
+                    if key[0] == parent_page:
+                        assert child in tiers.parked, (child, key)
+                        batch.append((child, tiers.unpark(child)))
+            t0 = time.perf_counter()
+            for page, ck in batch:
+                if tiers.wants_spill:
+                    tiers.spill(ck, self._read_page(page))
+                self._deregister(page)
+                self.pool.reclaim(page)
+                freed += 1
+            tiers.counters["spill_s"] += time.perf_counter() - t0
+            tiers.counters["reclaimed_pages"] += len(batch)
+        return freed
+
+    def tick_tiers(self) -> None:
+        """Publish pending prefetches; the engine calls this once per step."""
+        if self.tiers is not None:
+            self.tiers.tick()
+
+    def flush_tiers(self) -> int:
+        """Spill and free EVERY parked page (idle demotion, or persisting
+        the prefix cache before a planned restart). Returns pages freed."""
+        if self.tiers is None:
+            return 0
+        self.tiers.tick()
+        return self.reclaim_parked(len(self.tiers.parked))
+
+    @property
+    def parked_count(self) -> int:
+        return 0 if self.tiers is None else len(self.tiers.parked)
+
+    def _read_page(self, page: int) -> dict[str, np.ndarray]:
+        """One physical page's contents (all layers) as host arrays."""
+        return {key: np.asarray(arr[:, page]) for key, arr in self.pages.items()}
+
+    def _upload_page(self, page: int, arrays: dict[str, np.ndarray]) -> None:
+        """Dispatch (async) the device writes restoring one spilled page."""
+        idx = jnp.asarray(page, jnp.int32)
+        for key in self.pages:
+            data = jnp.asarray(arrays[key][:, None])
+            self.pages[key] = _write_page(self.pages[key], idx, data)
 
     # ------------------------------------------------------------------
     # slots
@@ -236,18 +474,33 @@ class PagedKVCache:
         return len(self._free_slots)
 
     def can_admit(self, context_len: int, tokens=None) -> bool:
+        """Admission check — with tiers attached this is also where the
+        pressure valve lives: parked pages are reclaimed BEFORE the check
+        can fail, and a prompt whose spilled prefix is mid-prefetch waits
+        (returns False) rather than re-prefilling it."""
+        if not self._free_slots:
+            return False
         need = cdiv(max(context_len, 1), self.page_size)
+        matched: list[int] = []
         if tokens is not None:
-            need -= len(self.match_prefix(tokens)[0])
-        return bool(self._free_slots) and self.pool.available >= need
+            if self.tiers is not None:
+                self.tiers.counters["prefix_queries"] += 1
+            matched = self.match_prefix(tokens, prefetch=True)[0]
+            need -= len(matched)
+            if self._next_is_pending(matched, tokens):
+                return False
+        if self.pool.available < need:
+            self.reclaim_parked(need - self.pool.available, protect=matched)
+        return self.pool.available >= need
 
     def admit(self, context_len: int, tokens=None) -> tuple[int, int]:
         """Claim a slot and pages for an initial context of ``context_len``.
 
         When ``tokens`` (the prompt) is given, full pages already holding a
-        matching prefix are mapped read-only (refcount bumped) instead of
-        allocated. Returns (slot, cached_len) — the caller only needs to
-        prefill positions >= cached_len.
+        matching prefix are mapped read-only (refcount bumped; parked pages
+        are revived in place) instead of allocated. Returns
+        (slot, cached_len) — the caller only needs to prefill positions
+        >= cached_len.
         """
         assert context_len <= self.max_pages_per_seq * self.page_size, (
             context_len, self.max_pages_per_seq * self.page_size)
@@ -257,13 +510,18 @@ class PagedKVCache:
             shared, cached = self.match_prefix(tokens)
         slot = self._free_slots.pop()
         for p in shared:
-            self.pool.incref(p)
+            if self.tiers is not None and p in self.tiers.parked:
+                self.tiers.unpark(p)
+                self.pool.revive(p)
+                self.tiers.counters["device_hits"] += 1
+            else:
+                self.pool.incref(p)
         fresh = cdiv(max(context_len, 1), self.page_size) - len(shared)
         try:
-            pages = shared + (self.pool.alloc(fresh) if fresh > 0 else [])
+            pages = shared + (self._alloc(fresh) if fresh > 0 else [])
         except RuntimeError:
-            for p in shared:
-                self.pool.decref(p)
+            for p in shared:  # revived parked pages re-park, sharers decref
+                self._drop_ref(p)
             self._free_slots.append(slot)
             raise
         if shared:
@@ -294,19 +552,20 @@ class PagedKVCache:
         step lands there: allocates a page at page boundaries (on-demand
         growth) and copy-on-writes a shared page anywhere else. Returns True
         when the block table changed; raises RuntimeError when the pool is
-        exhausted (callers may preempt)."""
+        exhausted (callers may preempt) — with tiers attached, parked pages
+        are reclaimed first, so preemption is truly the last resort."""
         need = int(self.lengths[slot]) // self.page_size
         pages = self._slot_pages[slot]
         if need == len(pages):
-            (new,) = self.pool.alloc(1)
+            (new,) = self._alloc(1)
             pages.append(new)
             self.block_tables[slot, need] = new
             return True
         old = pages[need]
         if self.pool.refcounts[old] > 1:  # shared: copy before the write
-            (new,) = self.pool.alloc(1)
-            self.k_pages, self.v_pages = _copy_page(
-                self.k_pages, self.v_pages,
+            (new,) = self._alloc(1)
+            self.pages = _copy_page(
+                self.pages,
                 jnp.asarray(old, jnp.int32), jnp.asarray(new, jnp.int32),
             )
             self.pool.decref(old)  # shared, so never frees here
@@ -322,8 +581,7 @@ class PagedKVCache:
 
     def release(self, slot: int) -> None:
         for p in self._slot_pages[slot]:
-            if self.pool.decref(p):
-                self._deregister(p)
+            self._drop_ref(p)
         self._slot_pages[slot] = []
         self.block_tables[slot] = NULL_PAGE
         self.lengths[slot] = 0
@@ -332,6 +590,35 @@ class PagedKVCache:
     # ------------------------------------------------------------------
     # device views
     # ------------------------------------------------------------------
+    @property
+    def k_pages(self) -> jax.Array:
+        return self.pages["k"]
+
+    @k_pages.setter
+    def k_pages(self, value: jax.Array) -> None:
+        self.pages["k"] = value
+
+    @property
+    def v_pages(self) -> jax.Array:
+        return self.pages["v"]
+
+    @v_pages.setter
+    def v_pages(self, value: jax.Array) -> None:
+        self.pages["v"] = value
+
+    @property
+    def page_nbytes(self) -> int:
+        """Device bytes per physical page across every pool array (K, V and
+        quantization scales) — the denominator for pages-per-HBM-byte."""
+        total = 0
+        for arr in self.pages.values():
+            per = arr.dtype.itemsize
+            for axis, dim in enumerate(arr.shape):
+                if axis != 1:
+                    per *= dim
+            total += per
+        return total
+
     def device_tables(self) -> tuple[jax.Array, jax.Array]:
         """Device copies of (block_tables, lengths).
 
@@ -348,22 +635,33 @@ class PagedKVCache:
         return jnp.asarray(self.block_tables[slot].copy())
 
     def set_pages(self, k_pages: jax.Array, v_pages: jax.Array) -> None:
-        self.k_pages, self.v_pages = k_pages, v_pages
+        self.pages["k"], self.pages["v"] = k_pages, v_pages
+
+    def swap_pages(self, pages: dict[str, jax.Array]) -> None:
+        """Swap in the executor's post-step page arrays (donated calls)."""
+        assert set(pages) == set(self.pages), (set(pages), set(self.pages))
+        self.pages = pages
 
     def _reshard(self, sharding) -> None:
-        """Re-place the page pool with an explicit sharding (the serving
-        executor shards the kv-head dim over its ``("model",)`` mesh).
-        Host-side bookkeeping is untouched: only the head dim may be
-        sharded, so page ids stay shard-invariant."""
-        self.set_pages(
-            jax.device_put(self.k_pages, sharding),
-            jax.device_put(self.v_pages, sharding),
-        )
+        """Re-place the page pool with explicit shardings (the serving
+        executor shards the kv-head dim over its ``("model",)`` mesh) —
+        either one sharding for every pool array or a dict keyed like
+        ``pages``. Host-side bookkeeping is untouched: only the head dim
+        may be sharded, so page ids stay shard-invariant."""
+        if not isinstance(sharding, dict):
+            sharding = {key: sharding for key in self.pages}
+        for key in self.pages:
+            self.pages[key] = jax.device_put(self.pages[key], sharding[key])
 
     def gather_dense(self, slot: int) -> tuple[np.ndarray, np.ndarray]:
-        """Reassemble a slot's K/V as dense (L, len, KVH, Dh) — tests only."""
-        k = np.asarray(self.k_pages)
-        v = np.asarray(self.v_pages)
+        """Reassemble a slot's K/V as dense (L, len, KVH, Dh) — tests only.
+        Quantized pools are dequantized, so callers compare fp32 values."""
+        if self.quant == "int8":
+            k = np.asarray(dequantize_pages(self.pages["k"], self.pages["k_scale"]))
+            v = np.asarray(dequantize_pages(self.pages["v"], self.pages["v_scale"]))
+        else:
+            k = np.asarray(self.pages["k"])
+            v = np.asarray(self.pages["v"])
         n = int(self.lengths[slot])
         pages = self._slot_pages[slot]
         out_k = np.concatenate([k[:, p] for p in pages], axis=1)[:, :n]
@@ -372,24 +670,33 @@ class PagedKVCache:
 
 
 def write_prefill_pages(
-    k_pages: jax.Array,   # (L, P, page, KVH, Dh) — donated by the caller's jit
-    v_pages: jax.Array,
+    pages: dict[str, jax.Array],  # pool arrays — donated by the caller's jit
     k_new: jax.Array,     # (L, S, KVH, Dh) dense prefill K (S may be padded)
     v_new: jax.Array,
     table_row: jax.Array,  # (MP,) int32 physical page per logical page
     valid_len: jax.Array,  # scalar int32: positions < valid_len are real
-) -> tuple[jax.Array, jax.Array]:
+) -> dict[str, jax.Array]:
     """Scatter one sequence's dense prefill K/V into its pages.
 
     Padded positions (>= valid_len) are routed out of bounds and dropped —
     bucketed prompt padding never lands anywhere, and every surviving
     scatter index is unique (duplicate-index scatter order is undefined).
+    Quantized pools (``k_scale`` present) quantize the dense chunk on the
+    way in and scatter the scales alongside.
     """
-    num_pages, page = k_pages.shape[1:3]
+    num_pages, page = pages["k"].shape[1:3]
     s = k_new.shape[1]
     pos = jnp.arange(s)
     phys = jnp.where(pos < valid_len, table_row[pos // page], num_pages)
     off = pos % page
-    k_pages = k_pages.at[:, phys, off].set(k_new, mode="drop")
-    v_pages = v_pages.at[:, phys, off].set(v_new, mode="drop")
-    return k_pages, v_pages
+    out = dict(pages)
+    if "k_scale" in pages:
+        k_new, k_sc = quantize_kv(k_new)
+        v_new, v_sc = quantize_kv(v_new)
+        out["k_scale"] = pages["k_scale"].at[:, phys, off].set(k_sc, mode="drop")
+        out["v_scale"] = pages["v_scale"].at[:, phys, off].set(v_sc, mode="drop")
+    out["k"] = pages["k"].at[:, phys, off].set(
+        k_new.astype(pages["k"].dtype), mode="drop")
+    out["v"] = pages["v"].at[:, phys, off].set(
+        v_new.astype(pages["v"].dtype), mode="drop")
+    return out

@@ -20,6 +20,11 @@ percentile/format logic used by ``launch/serve.py`` and
   This is the observability knob for the fused mixed step: a low fused
   fraction under mixed load means the scheduler is starving one side;
   high padding means ``max_slots`` is oversized for the offered load.
+* **KV tier gauges** (``record_tiers``) — per-step parked/host/persisted
+  page counts plus deltas of the :class:`~repro.serving.kv_tiers.
+  KVTierManager` counters (tier hits, spill/prefetch bytes and seconds).
+  This answers whether prefix reuse is actually landing (device vs host vs
+  persisted hits) and what the spill traffic costs.
 """
 
 from __future__ import annotations
@@ -45,6 +50,14 @@ class UtilizationMetrics:
         self.decode_rows = 0
         self.prefill_rows = 0
         self.padded_rows = 0
+        # KV tier gauges (paged engine with tiers enabled): per-step page
+        # counts per tier, plus the latest snapshot of the tier manager's
+        # additive counters (one manager per engine, counters start at 0)
+        self.parked_samples: list[int] = []
+        self.host_samples: list[int] = []
+        self.persist_samples: list[int] = []
+        self._tier_latest: dict | None = None
+        self._tier_merged: dict = {}
 
     def record(self, *, active: int, slots: int,
                pages_used: int | None = None,
@@ -63,6 +76,27 @@ class UtilizationMetrics:
         self.prefill_rows += prefill_rows
         self.padded_rows += padded_rows
 
+    def record_tiers(self, *, parked: int, host: int, persisted: int,
+                     counters: dict) -> None:
+        """Record one step's KV tier state: page counts per tier (gauges)
+        plus a snapshot of the tier manager's additive counters. The tier
+        manager is born with the engine and its counters start at zero, so
+        the latest snapshot IS this engine's lifetime total — admissions
+        that precede the first decode step (prefix queries, prefetches) are
+        included, not baselined away."""
+        self.parked_samples.append(parked)
+        self.host_samples.append(host)
+        self.persist_samples.append(persisted)
+        self._tier_latest = dict(counters)
+
+    def _tier_deltas(self) -> dict:
+        """This tracker's counter totals plus anything merged in."""
+        out = dict(self._tier_merged)
+        if self._tier_latest is not None:
+            for key, val in self._tier_latest.items():
+                out[key] = out.get(key, 0) + val
+        return out
+
     def merge(self, other: "UtilizationMetrics") -> None:
         self.slot_samples.extend(other.slot_samples)
         self.page_samples.extend(other.page_samples)
@@ -71,6 +105,11 @@ class UtilizationMetrics:
         self.decode_rows += other.decode_rows
         self.prefill_rows += other.prefill_rows
         self.padded_rows += other.padded_rows
+        self.parked_samples.extend(other.parked_samples)
+        self.host_samples.extend(other.host_samples)
+        self.persist_samples.extend(other.persist_samples)
+        for key, val in other._tier_deltas().items():
+            self._tier_merged[key] = self._tier_merged.get(key, 0) + val
 
     @property
     def steps(self) -> int:
@@ -96,6 +135,24 @@ class UtilizationMetrics:
             out["prefill_rows"] = self.prefill_rows
             out["padded_rows"] = self.padded_rows
             out["padded_row_fraction"] = self.padded_rows / max(rows, 1)
+        tiers = self._tier_deltas()
+        if self.parked_samples or tiers:
+            t: dict = {}
+            if self.parked_samples:
+                t["parked_pages_mean"] = float(np.mean(self.parked_samples))
+                t["parked_pages_peak"] = int(np.max(self.parked_samples))
+                t["host_pages_peak"] = int(np.max(self.host_samples))
+                t["persisted_pages_peak"] = int(np.max(self.persist_samples))
+            t.update(tiers)
+            q = t.get("prefix_queries", 0)
+            if q:
+                # hits count PAGES revived, queries count admissions — the
+                # quotient is cached pages served per prefix lookup, not a
+                # 0..1 rate (a deep cached prefix yields many pages per hit)
+                hits = (t.get("device_hits", 0) + t.get("host_hits", 0)
+                        + t.get("persist_hits", 0))
+                t["tier_hit_pages_per_query"] = hits / q
+            out["kv_tiers"] = t
         return out
 
     def format(self) -> str:
@@ -115,6 +172,16 @@ class UtilizationMetrics:
                     f";fused_frac={s['fused_step_fraction']:.0%}"
                     f";rows=d{s['decode_rows']}/p{s['prefill_rows']}"
                     f"/pad{s['padded_rows']}")
+        if "kv_tiers" in s:
+            t = s["kv_tiers"]
+            txt += (f";tiers=parked_peak{t.get('parked_pages_peak', 0)}"
+                    f"/host_peak{t.get('host_pages_peak', 0)}"
+                    f"/persist_peak{t.get('persisted_pages_peak', 0)}"
+                    f";tier_hits=dev{t.get('device_hits', 0)}"
+                    f"/host{t.get('host_hits', 0)}"
+                    f"/pv{t.get('persist_hits', 0)}"
+                    f";spilled={t.get('spilled_pages', 0)}"
+                    f";prefetched={t.get('prefetched_pages', 0)}")
         return txt
 
 

@@ -434,6 +434,10 @@ class Scheduler:
                 self.cache.max_slots)
 
     def page_utilization(self) -> tuple[int, int]:
-        """(pages in use, usable pages) — excludes the reserved null page."""
+        """(pages in use, usable pages) — excludes the reserved null page.
+        Parked pages (zero-refcount prefix pages in the reclaim-under-
+        pressure LRU) do not count as used: they are free capacity that
+        happens to still hold reusable bytes."""
         usable = self.cache.num_pages - 1
-        return usable - self.cache.pool.available, usable
+        used = usable - self.cache.pool.available - self.cache.parked_count
+        return used, usable

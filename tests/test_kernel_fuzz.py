@@ -480,6 +480,135 @@ def test_ssd_kernel_vs_oracle(params):
 
 
 # ---------------------------------------------------------------------------
+# int8 quantized KV pages (fused-dequant kernel variants)
+# ---------------------------------------------------------------------------
+# Two distinct bounds, asserted separately:
+#  - kernel parity: the fused-dequant Pallas kernel vs dequantize_pages +
+#    the unchanged fp32 oracle over the SAME int8 pool must agree to TOL —
+#    quantization itself contributes zero error to this comparison.
+#  - quantization error: int8 attention vs the original fp32 pool. Each KV
+#    element carries at most scale/2 ≈ absmax/254 absolute error; through
+#    the softmax-weighted sum the V error passes via a convex combination
+#    (bounded by max per-row V error) and the K error perturbs logits by
+#    O(|q|·d·scale/2), so for unit-normal inputs the observed output error
+#    is ~1e-2. QTOL below holds 4x margin over the sweep's observed max.
+
+QTOL = 8e-2  # int8-vs-fp32 attention output bound (observed ~2e-2)
+
+
+def _quantize_pool(kp, vp):
+    kq, ks = ref.quantize_kv(kp)
+    vq, vs = ref.quantize_kv(vp)
+    return kq, ks, vq, vs
+
+
+@pytest.mark.parametrize("params", _PREFILL_EDGES,
+                         ids=lambda p: "c{}s{}v{}h{}k{}d{}p{}x{}".format(*p))
+def test_paged_prefill_quantized_kernel_vs_oracle(params):
+    q, kp, vp, bt, start, valid = _prefill_case(params, seed=0)
+    kq, ks, vq, vs = _quantize_pool(kp, vp)
+    want = ref.paged_prefill_attention_ref(
+        q, ref.dequantize_pages(kq, ks), ref.dequantize_pages(vq, vs),
+        bt, start, valid,
+    )
+    got = ops.paged_prefill_attention(
+        q, kq, vq, bt, start, valid, k_scale=ks, v_scale=vs,
+        impl="pallas_interpret",
+    )
+    _assert_close(got, want, params, "paged_prefill_q")
+    # quantization error vs the original fp32 pool: the documented bound
+    fp32 = ref.paged_prefill_attention_ref(q, kp, vp, bt, start, valid)
+    err = float(jnp.abs(got - fp32).max())
+    assert err <= QTOL, f"paged_prefill int8-vs-fp32 err={err:.3e} > {QTOL}"
+
+
+@pytest.mark.parametrize("params", _decode_sweep()[:8],
+                         ids=lambda p: "b{}h{}k{}d{}p{}m{}{}".format(
+                             *p[:6], "a" if p[6] else ""))
+def test_paged_decode_quantized_kernel_vs_oracle(params):
+    q, kp, vp, bt, lens = _decode_case(params, seed=0)
+    kq, ks, vq, vs = _quantize_pool(kp, vp)
+    want = ops.paged_attention(
+        q, ref.dequantize_pages(kq, ks), ref.dequantize_pages(vq, vs),
+        bt, lens, impl="xla_chunked",
+    )
+    got = ops.paged_attention(q, kq, vq, bt, lens, k_scale=ks, v_scale=vs,
+                              impl="pallas_interpret")
+    _assert_close(got, want, params, "paged_decode_q")
+    fp32 = ops.paged_attention(q, kp, vp, bt, lens, impl="xla_chunked")
+    err = float(jnp.abs(got - fp32).max())
+    assert err <= QTOL, f"paged_decode int8-vs-fp32 err={err:.3e} > {QTOL}"
+    if int(lens[0]) == 0:
+        assert (np.asarray(got)[0] == 0).all(), "idle slot must stay zero"
+
+
+@pytest.mark.parametrize("params", _mixed_sweep()[:8],
+                         ids=lambda p: "r{}h{}k{}d{}p{}m{}x{}c{}".format(*p))
+def test_paged_mixed_quantized_kernel_vs_oracle(params):
+    q, kp, vp, bt, last = _mixed_case(params, seed=0)
+    kq, ks, vq, vs = _quantize_pool(kp, vp)
+    want = ops.paged_mixed_attention(
+        q, ref.dequantize_pages(kq, ks), ref.dequantize_pages(vq, vs),
+        bt, last, impl="xla_chunked",
+    )
+    got = ops.paged_mixed_attention(q, kq, vq, bt, last,
+                                    k_scale=ks, v_scale=vs,
+                                    impl="pallas_interpret")
+    _assert_close(got, want, params, "paged_mixed_q")
+    fp32 = ops.paged_mixed_attention(q, kp, vp, bt, last, impl="xla_chunked")
+    err = float(jnp.abs(got - fp32).max())
+    assert err <= QTOL, f"paged_mixed int8-vs-fp32 err={err:.3e} > {QTOL}"
+    dead = np.asarray(last) < 0
+    assert (np.asarray(got)[dead] == 0).all(), "dead rows must stay zero"
+
+
+def test_quantize_dequant_roundtrip_grid():
+    """Deterministic always-run slice of the round-trip property below."""
+    for rows, kvh, d, scale_exp, seed in [
+        (1, 1, 4, 0, 0), (16, 2, 8, -8, 1), (40, 4, 32, 8, 2),
+        (7, 1, 16, -3, 3), (24, 2, 4, 5, 4),
+    ]:
+        _roundtrip_check(rows, kvh, d, scale_exp, seed)
+
+
+def _roundtrip_check(rows, kvh, d, scale_exp, seed):
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((rows, kvh, d)) * 2.0 ** scale_exp).astype(
+        np.float32)
+    x[0] = 0.0
+    q, scale = ref.quantize_kv(jnp.asarray(x))
+    back = np.asarray(ref.dequantize_pages(q, scale))
+    bound = np.asarray(scale)[..., None] / 2 + 1e-9
+    assert (np.abs(back - x) <= bound).all()
+    assert (back[0] == 0).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.integers(1, 40),
+    kvh=st.sampled_from([1, 2, 4]),
+    d=st.sampled_from([4, 8, 16, 32]),
+    scale_exp=st.integers(-8, 8),
+    seed=st.integers(0, 2**16),
+)
+def test_quantize_dequant_roundtrip_bound(rows, kvh, d, scale_exp, seed):
+    """quantize_kv -> dequantize_pages recovers every element to within
+    scale/2 (the round-to-nearest half step), across magnitudes 2^-8..2^8,
+    and all-zero rows survive the scale clamp exactly."""
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((rows, kvh, d)) * 2.0 ** scale_exp).astype(
+        np.float32)
+    x[0] = 0.0  # always include an all-zero row
+    q, scale = ref.quantize_kv(jnp.asarray(x))
+    assert q.dtype == jnp.int8 and scale.shape == x.shape[:-1]
+    back = np.asarray(ref.dequantize_pages(q, scale))
+    bound = np.asarray(scale)[..., None] / 2 + 1e-9
+    assert (np.abs(back - x) <= bound).all(), (
+        f"round-trip exceeded scale/2 at rows={rows} d={d} 2^{scale_exp}")
+    assert (back[0] == 0).all()
+
+
+# ---------------------------------------------------------------------------
 # non-TPU fallback policy (ops.paged_* with impl="pallas")
 # ---------------------------------------------------------------------------
 

@@ -24,6 +24,13 @@ from repro.serving import (
 from repro.serving.kv_cache import NULL_PAGE, cdiv, write_prefill_pages
 
 
+def assert_drained(cache):
+    """Every page is either free or parked (zero-refcount prefix pages kept
+    for reuse by the tier manager) once all sequences have released."""
+    assert cache.pool.available + cache.parked_count == cache.num_pages - 1
+    assert (cache.pool.refcounts[1:] == 0).all()
+
+
 # ---------------------------------------------------------------------------
 # page pool
 # ---------------------------------------------------------------------------
@@ -181,11 +188,10 @@ def test_prefill_pages_match_dense_cache(smollm):
         max_slots=2, max_context=32, page_size=4,
     )
     slot, _ = paged.admit(context_len=plen)
-    k_pages, v_pages = write_prefill_pages(
-        paged.k_pages, paged.v_pages, cache["k"][:, 0], cache["v"][:, 0],
+    paged.swap_pages(write_prefill_pages(
+        dict(paged.pages), cache["k"][:, 0], cache["v"][:, 0],
         paged.device_row(slot), jnp.asarray(plen, jnp.int32),
-    )
-    paged.set_pages(k_pages, v_pages)
+    ))
     got_k, got_v = paged.gather_dense(slot)
     np.testing.assert_array_equal(got_k, np.asarray(cache["k"][:, 0, :plen]))
     np.testing.assert_array_equal(got_v, np.asarray(cache["v"][:, 0, :plen]))
@@ -222,11 +228,10 @@ def test_decode_step_paged_matches_dense(smollm):
     pcache, plogits = jax.jit(
         lambda p, b, i: model.prefill(p, b, plen, logits_index=i)
     )(params, batch, jnp.asarray(plen - 1, jnp.int32))
-    k_pages, v_pages = write_prefill_pages(
-        paged.k_pages, paged.v_pages, pcache["k"][:, 0], pcache["v"][:, 0],
+    paged.swap_pages(write_prefill_pages(
+        dict(paged.pages), pcache["k"][:, 0], pcache["v"][:, 0],
         paged.device_row(slot), jnp.asarray(plen, jnp.int32),
-    )
-    paged.set_pages(k_pages, v_pages)
+    ))
     np.testing.assert_allclose(
         np.asarray(plogits[0]), dense_logits[0], atol=1e-4, rtol=1e-4
     )
@@ -274,8 +279,8 @@ def test_continuous_engine_matches_lockstep(smollm):
         assert o.uid == r.uid
         assert o.tokens == exact.tokens, r.uid
         assert len(o.tokens) == r.max_new_tokens
-    # all pages returned to the pool
-    assert eng.cache.pool.available == eng.cache.num_pages - 1
+    # all pages returned to the pool (or parked for prefix reuse)
+    assert_drained(eng.cache)
     assert eng.cache.free_slot_count == eng.max_slots
 
 
@@ -322,7 +327,7 @@ def test_engine_preempts_under_pool_pressure(smollm):
     for r, o in zip(reqs, out):
         exact = base.generate([Request(r.uid, r.prompt, r.max_new_tokens)])[0]
         assert o.tokens == exact.tokens
-    assert eng.cache.pool.available == eng.cache.num_pages - 1
+    assert_drained(eng.cache)
 
 
 def test_engine_rejects_unschedulable_request(smollm):
@@ -535,8 +540,7 @@ def test_engine_preempts_when_cow_append_cannot_allocate(smollm):
     for r, o in zip(reqs, out):
         exact = base.generate([Request(r.uid, r.prompt, r.max_new_tokens)])[0]
         assert o.tokens == exact.tokens, r.uid
-    assert eng.cache.pool.available == eng.cache.num_pages - 1
-    assert (eng.cache.pool.refcounts[1:] == 0).all()
+    assert_drained(eng.cache)
 
 
 def test_prefill_chunk_matches_whole_prefill(smollm):
@@ -596,7 +600,7 @@ def test_engine_chunked_long_prompt_matches_lockstep(smollm):
     for r, o in zip(reqs, out):
         exact = base.generate([Request(r.uid, r.prompt, r.max_new_tokens)])[0]
         assert o.tokens == exact.tokens, r.uid
-    assert eng.cache.pool.available == eng.cache.num_pages - 1
+    assert_drained(eng.cache)
 
 
 def test_engine_prefix_sharing_reuses_pages_and_stays_exact(smollm):
@@ -622,8 +626,7 @@ def test_engine_prefix_sharing_reuses_pages_and_stays_exact(smollm):
     assert plain.cache.stats["prefix_hits"] == 0
     for a, b in zip(out_shared, out_plain):
         assert a.tokens == b.tokens, a.uid
-    assert shared.cache.pool.available == shared.cache.num_pages - 1
-    assert (shared.cache.pool.refcounts[1:] == 0).all()
+    assert_drained(shared.cache)
 
 
 def test_chunked_prefill_interleaves_with_decode(smollm):

@@ -99,22 +99,34 @@ def _check_paged_invariants(engine: ContinuousBatchingEngine) -> None:
             f"{refs.get(page, 0)} live references"
         )
 
-    # free list + referenced pages exactly partition the pool; a page on the
-    # free list twice would be a double-free, an unreachable allocated page
-    # a leak
+    # free list + referenced + parked pages exactly partition the pool; a
+    # page on the free list twice would be a double-free, an unreachable
+    # allocated page a leak, an overlap a tier state-machine violation
     free = pool._free
     assert len(set(free)) == len(free), "double-freed page on the free list"
     assert NULL_PAGE not in free
     used = set(refs)
+    tiers = cache.tiers
+    parked = set(tiers.parked) if tiers is not None else set()
     assert not set(free) & used, "page simultaneously free and referenced"
-    assert set(free) | used == set(range(1, cache.num_pages)), "leaked page"
+    assert not parked & used, "parked page still referenced by a slot"
+    assert not set(free) & parked, "parked page on the free list"
+    assert set(free) | used | parked == set(range(1, cache.num_pages)), \
+        "leaked page"
+    if tiers is not None:
+        for p in parked:
+            assert int(pool.refcounts[p]) == 0, f"parked page {p} refcounted"
+            # parked pages stay matchable: index entry + content key intact
+            assert p in cache._page_key and p in cache._page_ck, p
+        assert tiers.pending <= parked, "pending prefetch outside parked set"
+        assert len(tiers.host) <= max(tiers.host_pages, 0), "host tier overflow"
 
     # the prefix index only maps full frozen pages, bijectively
     assert len(cache._page_key) == len(cache._prefix_index)
     for key, page in cache._prefix_index.items():
         parent, chunk = key
         assert len(chunk) == cache.page_size, "partial page in prefix index"
-        assert page in used, "prefix index maps a freed page"
+        assert page in used or page in parked, "prefix index maps a freed page"
         assert cache._page_key.get(page) == key
     for slot, seq in sched.slots.items():
         # positions provably written for this slot: the prefill cursor while
@@ -137,6 +149,15 @@ def _check_paged_invariants(engine: ContinuousBatchingEngine) -> None:
     for s in cache._free_slots:
         assert int(cache.lengths[s]) == 0
         assert (cache.block_tables[s] == NULL_PAGE).all()
+
+
+def _check_drained(cache) -> None:
+    """Post-drain tier partition: no refcounts, every page free or parked,
+    and the prefix index covers exactly the parked set."""
+    assert cache.pool.available + cache.parked_count == cache.num_pages - 1
+    assert (cache.pool.refcounts[1:] == 0).all()
+    parked = set(cache.tiers.parked) if cache.tiers is not None else set()
+    assert set(cache._page_key) == parked
 
 
 def _check_lockstep_invariants(engine: GenerationEngine) -> None:
@@ -218,9 +239,9 @@ def test_paged_engine_invariants_under_stress(smollm, seed):
     assert engine.cache.stats["prefix_hits"] > 0, (
         "trace too gentle: prefix sharing never exercised")
 
-    # drain state: pool fully reclaimed, prefix index empty, slots free
-    assert engine.cache.pool.available == engine.cache.num_pages - 1
-    assert not engine.cache._prefix_index and not engine.cache._page_key
+    # drain state: every page free or parked, slots free, and exactly the
+    # parked pages keep prefix-index entries (tiers keep prefixes warm)
+    _check_drained(engine.cache)
     assert len(engine.cache._free_slots) == engine.cache.max_slots
 
     # every handle finished with a typed reason
@@ -294,9 +315,8 @@ def test_paged_engine_restart_mid_trace(smollm, seed):
         steps += 1
         assert steps < 600, "restarted trace failed to drain"
 
-    # rebuilt-engine drain state: pool reclaimed, prefix index empty
-    assert engine2.cache.pool.available == engine2.cache.num_pages - 1
-    assert not engine2.cache._prefix_index and not engine2.cache._page_key
+    # rebuilt-engine drain state: pool reclaimed up to parked prefixes
+    _check_drained(engine2.cache)
 
     oracle = _replay(cfg, params, ContinuousBatchingEngine, reqs, **kw)
     for uid, h in pre_crash.items():
@@ -315,6 +335,61 @@ def test_paged_engine_restart_mid_trace(smollm, seed):
         pre = delivered[uid]
         assert h.tokens[:len(pre)] == pre, (
             f"{uid}: pre-crash delivery is not a prefix of the replay")
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_tiered_engine_streams_match_untiered(smollm, seed, tmp_path):
+    """Park/spill/reload/reclaim must never change a stream: the stress
+    trace with every tier engaged — a pool small enough that parked pages
+    get reclaimed, a host-RAM tier, a persisted ArtifactStore tier — must
+    produce byte-identical streams to a tiers-OFF run of the same trace,
+    while the tier partition invariant holds after every step."""
+    cfg, params = smollm
+    reqs, actions, _attempted = _make_trace(seed)
+    kw = dict(max_slots=4, page_size=PAGE, num_pages=8, prefill_chunk=PAGE,
+              prefix_sharing=True, seed=seed)
+    engine = ContinuousBatchingEngine(
+        cfg, params, max_len=MAX_LEN, host_pages=16,
+        persist_dir=str(tmp_path / "kv"), **kw)
+    handles, _, cancelled = _drive(engine, reqs, actions,
+                                   _check_paged_invariants)
+    t = engine.cache.tiers
+    assert t.counters["reclaimed_pages"] > 0, (
+        "trace too gentle: parked pages were never reclaimed under pressure")
+    assert t.counters["spilled_pages"] > 0, "spill path never exercised"
+    _check_drained(engine.cache)
+
+    oracle = _replay(cfg, params, ContinuousBatchingEngine, reqs,
+                     kv_tiers=False, **kw)
+    for uid, h in handles.items():
+        want = oracle[uid].tokens
+        if uid in cancelled:
+            assert h.tokens == want[:len(h.tokens)], uid
+        else:
+            assert h.tokens == want, uid
+
+
+@pytest.mark.parametrize("seed", [0])
+def test_quantized_engine_invariants_and_determinism(smollm, seed):
+    """``kv_quant="int8"`` arm: the full invariant sweep holds under the
+    same perturbed trace, and streams replay byte-identical to an
+    unperturbed int8 oracle — quantized numerics may differ from fp32, but
+    determinism (the preemption/sharing-invisibility contract) must not."""
+    cfg, params = smollm
+    reqs, actions, _attempted = _make_trace(seed)
+    kw = dict(max_slots=4, page_size=PAGE, num_pages=8, prefill_chunk=PAGE,
+              prefix_sharing=True, seed=seed, kv_quant="int8")
+    engine = ContinuousBatchingEngine(cfg, params, max_len=MAX_LEN, **kw)
+    handles, _, cancelled = _drive(engine, reqs, actions,
+                                   _check_paged_invariants)
+    _check_drained(engine.cache)
+    oracle = _replay(cfg, params, ContinuousBatchingEngine, reqs, **kw)
+    for uid, h in handles.items():
+        want = oracle[uid].tokens
+        if uid in cancelled:
+            assert h.tokens == want[:len(h.tokens)], uid
+        else:
+            assert h.tokens == want, uid
 
 
 @pytest.mark.parametrize("seed", [0])

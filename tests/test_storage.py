@@ -1,0 +1,156 @@
+"""Dedicated ``core/storage.py`` unit tests.
+
+The ArtifactStore grew a second life as the serving KV tiers' persistence
+backend (``serving/kv_tiers.py``): spilled prefix pages are ``put`` as
+ndarrays into the node tier and looked up by content-keyed refs after a
+process restart. These tests pin the exact properties that path relies on
+— round-trips by kind, tier directory layout, restart visibility, ref
+idempotence — plus the VolumeClaim capacity accounting (claim /
+``used_bytes`` / release) that ``test_bus_storage.py`` only touches.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.storage import TIERS, ArtifactStore
+
+
+# ---------------------------------------------------------------------------
+# put/get round-trips
+# ---------------------------------------------------------------------------
+
+
+def test_put_get_roundtrip_ndarray_dtypes(tmp_path):
+    """The KV spill path stores int8 pages, f32 scales and i64-derived
+    metadata — every dtype must round-trip bit-exact, shape included."""
+    store = ArtifactStore(tmp_path)
+    for arr in (
+        np.arange(24, dtype=np.int8).reshape(2, 3, 4),
+        np.linspace(-1, 1, 12, dtype=np.float32).reshape(3, 4),
+        np.array([], dtype=np.float64),
+        np.zeros((1, 2, 8, 2, 4), np.float16),
+    ):
+        got = store.get(store.put(arr, name="kv"))
+        assert got.dtype == arr.dtype and got.shape == arr.shape
+        np.testing.assert_array_equal(got, arr)
+
+
+def test_put_is_idempotent_and_ref_stable(tmp_path):
+    """Same content -> same ref, and re-putting never rewrites the object
+    (content addressing is what makes write-through spill cheap on reruns)."""
+    store = ArtifactStore(tmp_path)
+    arr = np.arange(10, dtype=np.float32)
+    r1 = store.put(arr, name="kv.k")
+    data = tmp_path / "shared" / "objects" / r1.split("://")[1].split("/")[0] / "data"
+    mtime = data.stat().st_mtime_ns
+    r2 = store.put(arr, name="kv.k")
+    assert r1 == r2
+    assert data.stat().st_mtime_ns == mtime  # not rewritten
+    assert store.exists(r1)
+
+
+def test_put_tree_reconstructs_nested_pytree(tmp_path):
+    store = ArtifactStore(tmp_path)
+    tree = {"k": np.arange(6).reshape(2, 3), "nested": [np.ones(3), np.zeros(2)]}
+    meta = store.get(store.put_tree(tree, name="params"))
+    assert set(meta) == {"treedef", "leaves"} and len(meta["leaves"]) == 3
+    got = [store.get(r) for r in meta["leaves"]]
+    np.testing.assert_array_equal(got[0], tree["k"])
+    np.testing.assert_array_equal(got[1], tree["nested"][0])
+    np.testing.assert_array_equal(got[2], tree["nested"][1])
+
+
+# ---------------------------------------------------------------------------
+# tier directories
+# ---------------------------------------------------------------------------
+
+
+def test_tier_directories_created_and_disjoint(tmp_path):
+    store = ArtifactStore(tmp_path, node_id="n1")
+    assert (tmp_path / "shared" / "objects").is_dir()
+    assert (tmp_path / "node" / "n1" / "objects").is_dir()
+    rn = store.put(b"same-bytes", tier="node")
+    rs = store.put(b"same-bytes", tier="shared")
+    # same digest, but each tier holds its own copy under its own root
+    assert rn.split("://")[1] == rs.split("://")[1]
+    digest = rn.split("://")[1].split("/")[0]
+    assert (tmp_path / "node" / "n1" / "objects" / digest / "data").exists()
+    assert (tmp_path / "shared" / "objects" / digest / "data").exists()
+
+
+def test_node_tier_is_node_affine(tmp_path):
+    """A node:// ref written by one node is invisible to another node's
+    store over the same root — the PV nodeAffinity analogue."""
+    a = ArtifactStore(tmp_path, node_id="a")
+    b = ArtifactStore(tmp_path, node_id="b")
+    ref = a.put(b"node-local", tier="node")
+    assert a.exists(ref) and not b.exists(ref)
+    shared = a.put(b"cluster-wide", tier="shared")
+    assert b.get(shared) == b"cluster-wide"
+
+
+def test_unknown_tier_rejected(tmp_path):
+    store = ArtifactStore(tmp_path)
+    with pytest.raises(ValueError, match="unknown tier"):
+        store.put(b"x", tier="ebs")
+    assert set(TIERS) == {"node", "shared"}
+
+
+def test_restart_sees_persisted_objects(tmp_path):
+    """A fresh store over the same root resolves yesterday's refs — the
+    property the KV prefix persistence index depends on across restarts."""
+    ref = ArtifactStore(tmp_path, node_id="n0").put(
+        np.full((4, 4), 7, np.int8), tier="node", name="kv.k"
+    )
+    # side files next to the objects survive too (kv_prefix_index.json)
+    (tmp_path / "kv_prefix_index.json").write_text(json.dumps({"ck": {"k": ref}}))
+
+    store2 = ArtifactStore(tmp_path, node_id="n0")
+    idx = json.loads((store2.root / "kv_prefix_index.json").read_text())
+    got = store2.get(idx["ck"]["k"])
+    np.testing.assert_array_equal(got, np.full((4, 4), 7, np.int8))
+
+
+# ---------------------------------------------------------------------------
+# VolumeClaim capacity accounting
+# ---------------------------------------------------------------------------
+
+
+def test_claim_used_bytes_tracks_nested_files(tmp_path):
+    store = ArtifactStore(tmp_path)
+    claim = store.claim("ckpt", tier="shared", capacity_bytes=1 << 16)
+    assert claim.used_bytes() == 0
+    (claim.path / "a.bin").write_bytes(b"x" * 100)
+    sub = claim.path / "sub"
+    sub.mkdir()
+    (sub / "b.bin").write_bytes(b"y" * 50)
+    assert claim.used_bytes() == 150  # recursive, files only
+    (claim.path / "a.bin").unlink()
+    assert claim.used_bytes() == 50
+    assert claim.capacity_bytes == 1 << 16
+
+
+def test_claim_same_name_is_stable_and_release_removes(tmp_path):
+    """Re-claiming a name re-attaches to the same directory (restart
+    resumes its volume); release removes it and is idempotent."""
+    store = ArtifactStore(tmp_path, node_id="w0")
+    c1 = store.claim("vol", tier="node", capacity_bytes=1024)
+    (c1.path / "f").write_bytes(b"z" * 10)
+    c2 = store.claim("vol", tier="node", capacity_bytes=1024)
+    assert c2.path == c1.path and c2.used_bytes() == 10
+    assert c1.tier == "node" and "w0" in str(c1.path)
+    store.release(c1)
+    assert not c1.path.exists()
+    store.release(c1)  # already gone: no error
+
+
+def test_claims_isolated_per_name(tmp_path):
+    store = ArtifactStore(tmp_path)
+    a = store.claim("a")
+    b = store.claim("b")
+    (a.path / "f").write_bytes(b"q" * 30)
+    assert b.used_bytes() == 0
+    store.release(a)
+    assert b.path.exists()
