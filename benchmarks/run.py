@@ -411,6 +411,166 @@ def bench_serving_low_load(quick: bool):
                   utilization=engines["interleaved"].utilization.summary())
 
 
+def bench_serving_speculative(quick: bool):
+    """Speculative decoding on the greedy low-batch decode-bound trace —
+    the regime where the serial one-token-per-dispatch chain is the whole
+    cost and speculation's k-tokens-per-dispatch verify pays off directly.
+
+    Two workload arms, because acceptance rate is workload-dependent and
+    the honest bench shows both ends:
+
+    * ``loop`` — a checkpoint whose greedy rollout degenerates into a
+      short cycle (residual branches zeroed, so the logits depend only on
+      the last token: every rollout must enter a cycle over the token
+      map). Random-init reduced models emit near-uniform pseudo-random
+      streams — the WORST case for prompt-lookup — while real greedy
+      decoding is famously repetition-prone; this arm models the
+      repetitive regime where n-gram lookup actually lands. Headline:
+      spec-on vs spec-off tok/s, alternated best-of-3.
+    * ``random`` — plain random init, acceptance near zero: bounds the
+      overhead speculation costs when every draft is rejected.
+
+    Plus an acceptance-rate sweep over k ∈ {2, 4, 8} on the loop arm
+    (single runs; acceptance comes from the utilization counters, not
+    wall-clock). Streams are byte-identical spec-on vs spec-off by
+    construction — asserted here on every run, not just in the tests."""
+    import jax
+
+    from repro.configs import ARCHS, reduced
+    from repro.launch.mesh import describe_mesh
+    from repro.models import build_model
+    from repro.serving import ContinuousBatchingEngine, Request
+    from repro.serving.metrics import UtilizationMetrics
+
+    cfg = reduced(ARCHS["smollm-360m"])
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    # loop-degenerate checkpoint: zero the residual-branch output
+    # projections so each block is the identity and greedy sampling is a
+    # fixed map last-token -> next-token (attention/MLP FLOPs still run —
+    # only the CONTENT degenerates, the dispatch cost does not)
+    loop_params = dict(params)
+    layers = {k: dict(v) if isinstance(v, dict) else v
+              for k, v in params["layers"].items()}
+    layers["attn"] = dict(params["layers"]["attn"])
+    layers["attn"]["wo"] = layers["attn"]["wo"] * 0.0
+    layers["mlp"] = dict(params["layers"]["mlp"])
+    layers["mlp"]["w_down"] = layers["mlp"]["w_down"] * 0.0
+    loop_params["layers"] = layers
+
+    rng = np.random.default_rng(11)
+    n = 3 if quick else 6
+    gap = 8 if quick else 16  # steps between arrivals -> ~2-3 in flight
+    trace = [
+        Request(
+            f"s{i}",
+            list(rng.integers(1, cfg.vocab_size, rng.integers(16, 33))),
+            max_new_tokens=int(rng.integers(24, 33)) if quick
+            else int(rng.integers(64, 97)),
+        )
+        for i in range(n)
+    ]
+    useful = sum(r.max_new_tokens for r in trace)
+    max_len = 32 + 96
+
+    def make(p, spec, k=8):
+        kw = {} if spec == "off" else {"speculative": spec, "spec_k": k}
+        return ContinuousBatchingEngine(
+            cfg, p, max_len=max_len, max_slots=4, page_size=16,
+            prefill_chunk=16, **kw)
+
+    def one_run(engine):
+        engine.utilization = UtilizationMetrics()
+        pending = _fresh(trace)
+        handles = []
+        step_i = 0
+        t0 = time.perf_counter()
+        while pending or not engine.idle:
+            while pending and step_i >= gap * len(handles):
+                handles.append(engine.submit(pending.pop(0)))
+            engine.step()
+            step_i += 1
+        return time.perf_counter() - t0, [h.result() for h in handles]
+
+    def streams(results):
+        return {r.uid: tuple(r.tokens) for r in results}
+
+    engines = {"off": make(loop_params, "off"),
+               "ngram": make(loop_params, "ngram")}
+    warm = {name: one_run(engine)[1] for name, engine in engines.items()}
+    assert streams(warm["ngram"]) == streams(warm["off"]), \
+        "speculative streams diverged from spec-off"
+    rounds = 1 if quick else 3
+    best = _best_of(engines, one_run, rounds)
+    off_s, off_res = best["off"]
+    spec_s, spec_res = best["ngram"]
+    assert streams(spec_res) == streams(off_res)
+    spec_util = engines["ngram"].utilization.summary()
+
+    row("serve_spec_off", off_s * 1e6, f"tok_per_s={useful/off_s:.1f}")
+    row("serve_spec_ngram", spec_s * 1e6,
+        f"tok_per_s={useful/spec_s:.1f};spec_speedup={off_s/spec_s:.2f}x;"
+        f"accept={spec_util['speculation']['acceptance_rate']:.0%}")
+
+    # acceptance-rate sweep: how tokens/bundle scales with draft depth
+    sweep = {}
+    for k in (2, 4, 8):
+        e = make(loop_params, "ngram", k=k)
+        one_run(e)  # warm: each k compiles its own verify width
+        t_k, res_k = one_run(e)
+        assert streams(res_k) == streams(warm["off"])
+        sp = e.utilization.summary()["speculation"]
+        sweep[f"k{k}"] = {
+            "tok_per_s": useful / t_k,
+            "acceptance_rate": round(sp["acceptance_rate"], 3),
+            "tokens_per_bundle": round(sp["tokens_per_bundle"], 2),
+            "bundles": sp["bundles"],
+        }
+        row(f"serve_spec_sweep_k{k}", t_k * 1e6,
+            f"tok_per_s={useful/t_k:.1f};"
+            f"accept={sp['acceptance_rate']:.0%};"
+            f"tok_per_bundle={sp['tokens_per_bundle']:.2f}")
+
+    # adversarial arm: pseudo-random streams, every draft rejected —
+    # bounds the overhead of speculating and never landing
+    rand = {"off": make(params, "off"), "ngram": make(params, "ngram")}
+    for engine in rand.values():
+        one_run(engine)
+    rand_best = _best_of(rand, one_run, 1)
+    roff_s, roff_res = rand_best["off"]
+    rspec_s, rspec_res = rand_best["ngram"]
+    assert streams(rspec_res) == streams(roff_res)
+    rand_util = rand["ngram"].utilization.summary()
+    rand_accept = (rand_util.get("speculation") or {}).get(
+        "acceptance_rate", 0.0)
+    row("serve_spec_random", rspec_s * 1e6,
+        f"tok_per_s={useful/rspec_s:.1f};"
+        f"vs_off={roff_s/rspec_s:.2f}x;accept={rand_accept:.0%}")
+
+    SERVING["bench_serving_speculative"] = {"config": {
+        "arch": cfg.name, "requests": n, "prompt_len": [16, 32],
+        "max_new": [24, 32] if quick else [64, 96], "slots": 4,
+        "prefill_chunk": 16, "arrival_gap_steps": gap, "max_len": max_len,
+        "spec_k": 8, "best_of": rounds, "greedy": True,
+        "mesh": describe_mesh(engines["off"].executor.mesh),
+    }}
+    serving_entry("bench_serving_speculative", "loop_off",
+                  tok_per_s=useful / off_s, results=off_res)
+    serving_entry("bench_serving_speculative", "loop_ngram",
+                  tok_per_s=useful / spec_s, results=spec_res,
+                  spec_speedup=round(off_s / spec_s, 2),
+                  byte_identical=True,
+                  utilization=spec_util)
+    serving_entry("bench_serving_speculative", "random_off",
+                  tok_per_s=useful / roff_s, results=roff_res)
+    serving_entry("bench_serving_speculative", "random_ngram",
+                  tok_per_s=useful / rspec_s, results=rspec_res,
+                  spec_speedup=round(roff_s / rspec_s, 2),
+                  byte_identical=True,
+                  acceptance_rate=round(rand_accept, 3))
+    SERVING["bench_serving_speculative"]["k_sweep"] = sweep
+
+
 def bench_serving_shared_prefix(quick: bool):
     """Chunked prefill + COW prefix sharing vs the PR-1 engine (whole-prompt
     bucketed prefill, no sharing) on a shared-prefix trace — the
@@ -927,7 +1087,8 @@ def main() -> None:
                bench_kernels, bench_recovery, bench_scaling, bench_step,
                bench_serving, bench_serving_shared_prefix,
                bench_serving_rerun, bench_serving_prefill_heavy,
-               bench_serving_low_load, bench_fleet_recovery)
+               bench_serving_low_load, bench_serving_speculative,
+               bench_fleet_recovery)
     for bench in benches:
         if args.only and args.only not in bench.__name__:
             continue

@@ -303,6 +303,40 @@ def paged_mixed_attention_ref(
     return out.reshape(r, h, d).astype(q.dtype)
 
 
+def paged_verify_attention_ref(
+    q: jax.Array,            # (C, H, D) bundle queries: t_last + k drafts
+    k_pages: jax.Array,      # (P, page, KVH, D) shared page pool
+    v_pages: jax.Array,
+    block_table: jax.Array,  # (MP,) int32 the sequence's block-table row
+    start: jax.Array,        # scalar int32: cached length L before the bundle
+    valid: jax.Array,        # scalar int32: 1 + number of drafted tokens
+    *,
+    scale: float | None = None,
+) -> jax.Array:
+    """Speculative-verify oracle: score a k-token draft bundle in one pass.
+
+    Row i is the query for absolute position ``start + i`` (row 0 is the
+    last committed token, rows 1..k the drafts) and must attend exactly the
+    positions a sequential i-step decode loop would see: the cached prefix
+    plus the bundle rows ``<= i`` (the bundle's own K/V already scattered
+    at ``start .. start+valid-1``). That predicate is precisely the mixed
+    kernel's chunk half, so this oracle delegates to
+    :func:`paged_mixed_attention_ref` with broadcast tables and positions
+    ``start + i`` (dead past ``valid``) — pinning down, as executable
+    documentation, that verify == chunk attention == an unrolled decode
+    loop. ``tests/test_kernel_fuzz.py`` asserts all three agree to 1e-3
+    for k in 1..8, including COW-forked and preempted-resumed tables.
+    Returns (C, H, D) in q.dtype; padded rows are exact zeros.
+    """
+    c = q.shape[0]
+    idx = jnp.arange(c)
+    last_pos = jnp.where(idx < valid, start + idx, -1).astype(jnp.int32)
+    tables = jnp.broadcast_to(block_table, (c,) + block_table.shape)
+    return paged_mixed_attention_ref(
+        q, k_pages, v_pages, tables, last_pos, scale=scale
+    )
+
+
 # ---------------------------------------------------------------------------
 # Mamba2 SSD
 # ---------------------------------------------------------------------------

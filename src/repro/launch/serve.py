@@ -103,6 +103,24 @@ def main() -> int:
                          "prefix-page persistence — spilled pages survive "
                          "restarts and re-serve identical prompt prefixes "
                          "across runs")
+    ap.add_argument("--spec", default="off",
+                    choices=["off", "ngram", "draft"],
+                    help="paged engine: speculative decoding proposer — "
+                         "'ngram' self-speculates from the request's own "
+                         "prompt+output history (no second model), 'draft' "
+                         "runs a small draft model (--draft-config) on its "
+                         "own paged cache; streams are byte-identical to "
+                         "'off' either way")
+    ap.add_argument("--spec-k", type=int, default=4, metavar="K",
+                    help="speculative decoding: drafted tokens per bundle "
+                         "(the verify dispatch scores K drafts + 1 bonus "
+                         "position in one call)")
+    ap.add_argument("--draft-config", default=None, metavar="ARCH",
+                    help="--spec draft: arch name for the draft model "
+                         "(e.g. 'smollm-360m'; '-reduced' suffix honored, "
+                         "and --reduced applies to the draft too); fresh "
+                         "seed-derived draft weights are initialized at "
+                         "startup")
     ap.add_argument("--attn-impl", default="auto",
                     choices=["auto", "pallas", "pallas_interpret",
                              "xla_chunked", "naive"],
@@ -199,6 +217,12 @@ def main() -> int:
     policies = {"fifo": FIFOAdmission, "priority": PriorityAdmission,
                 "deadline": DeadlineAdmission}
 
+    # --reduced shrinks the target; a draft arch named on the CLI must
+    # shrink with it, or the "small" draft model is full-size on CPU
+    draft_config = args.draft_config
+    if draft_config and args.reduced and not draft_config.endswith("-reduced"):
+        draft_config = f"{draft_config}-reduced"
+
     def make_engine():
         admission = policies[args.admission]()
         if use_paged:
@@ -214,6 +238,9 @@ def main() -> int:
                 kv_quant=args.kv_quant,
                 host_pages=args.host_pages,
                 persist_dir=args.persist_dir,
+                speculative=args.spec,
+                spec_k=args.spec_k,
+                draft_config=draft_config,
             )
         return GenerationEngine(cfg, params, max_len=max_len,
                                 max_batch=args.max_batch, admission=admission)

@@ -762,3 +762,61 @@ class DecoderLM:
             preferred_element_type=jnp.float32,
         ))[0, 0]
         return new_pages, logits
+
+    # ------------------------------------------------------------------
+    # speculative verify (continuous batching)
+    # ------------------------------------------------------------------
+    def verify_step_paged(self, params, pages, block_table, tokens, start,
+                          valid):
+        """Score a speculation bundle: C chunk-style rows of ONE sequence —
+        the last committed token followed by k drafted tokens — scattered
+        and attended exactly like a prefill chunk, but unembedding ALL C
+        rows instead of just the last.
+
+        pages: {"k": (L,P,page,KVH,Dh), "v": ...} — the shared page pool.
+        block_table (MP,) int32 is the sequence's row; tokens (C,) int32 is
+        ``[t_last, d_1 .. d_k]`` padded to the static bundle width; start
+        (scalar int32) is the sequence's cached length L (t_last's KV lands
+        at position L, draft i at L+i); valid (scalar int32) is ``1 + k``
+        for this bundle (padded rows past it write out of bounds and return
+        garbage the caller ignores).
+
+        Returns (new_pages, logits (C, Vp) f32): row i is the distribution
+        over the token at index ``idx0 + i`` given the committed history
+        plus drafts ``d_1 .. d_i`` — exactly what a sequential i-step
+        decode loop would produce, which is why acceptance under the
+        ``(seed, token_index)``-keyed sampler reproduces the spec-off
+        stream byte-for-byte. Attention rides the SAME chunk path as
+        ``prefill_chunk`` (``ops.paged_prefill_attention`` — the mixed
+        kernel's chunk half), so one fused dispatch both writes the k+1
+        candidate KV positions and scores them; rejection is a pure
+        host-side length rewind."""
+        cfg = self.cfg
+        assert cfg.family in ("dense", "moe"), cfg.family
+        x = jnp.take(params["embed"], tokens[None], axis=0)  # (1,C,D)
+
+        def body(x, inp):
+            pl, cl = inp
+            h = rms_norm(x, pl["ln1"], cfg.norm_eps)
+            h, new_cl = attn.prefill_chunk_attention_paged(
+                pl["attn"], h, cl, block_table, start, valid, cfg,
+                attn_impl=self.attn_impl,
+            )
+            x = x + h
+            h = rms_norm(x, pl["ln2"], cfg.norm_eps)
+            if cfg.family == "moe":
+                h, _ = moe_mod.moe_block(pl["moe"], h, cfg)
+            else:
+                h = swiglu(h, pl["mlp"]["w_gate"], pl["mlp"]["w_up"],
+                           pl["mlp"]["w_down"])
+            return x + h, new_cl
+
+        x, new_pages = jax.lax.scan(
+            body, x, (params["layers"], dict(pages))
+        )
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)  # (1,C,D)
+        logits = all_gather_logits(jnp.einsum(
+            "bsd,dv->bsv", x, self._unembed_weight(params),
+            preferred_element_type=jnp.float32,
+        ))[0]  # (C, Vp)
+        return new_pages, logits

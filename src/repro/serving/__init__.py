@@ -12,6 +12,10 @@ probes, crash-replay recovery, autoscaling (paper §3.5 fused with the
 serving arc). ``repro.serving.kv_tiers`` keeps prefix KV pages alive past
 release — parked on device, spilled to host RAM, persisted to an
 ArtifactStore — with async prefetch back on prefix hits.
+``repro.serving.speculative`` breaks the one-token-per-dispatch decode
+chain: an n-gram or draft-model proposer drafts k tokens and one fused
+verify dispatch scores them all, streams staying byte-identical to
+spec-off.
 """
 
 from repro.serving.api import (
@@ -38,11 +42,18 @@ from repro.serving.fleet import (
 from repro.serving.kv_cache import PagedKVCache, PagePool
 from repro.serving.kv_tiers import KVTierManager
 from repro.serving.metrics import FleetMetrics, format_latency, latency_percentiles
+from repro.serving.speculative import (
+    DraftModelProposer,
+    NgramProposer,
+    SpeculativeProposer,
+    build_proposer,
+)
 
 __all__ = [
     "AdmissionPolicy",
     "ContinuousBatchingEngine",
     "DeadlineAdmission",
+    "DraftModelProposer",
     "EngineCore",
     "EngineWorker",
     "FIFOAdmission",
@@ -52,6 +63,7 @@ __all__ = [
     "FleetSupervisor",
     "GenerationEngine",
     "KVTierManager",
+    "NgramProposer",
     "PagedKVCache",
     "PagePool",
     "PriorityAdmission",
@@ -59,7 +71,9 @@ __all__ = [
     "RequestHandle",
     "Result",
     "SamplingParams",
+    "SpeculativeProposer",
     "StreamEvent",
+    "build_proposer",
     "fleet_seed",
     "format_latency",
     "latency_percentiles",

@@ -71,6 +71,10 @@ class SamplingParams:
     terminate the request with ``FinishReason.STOP``; the stop token itself
     is not emitted. ``seed`` pins the request's RNG stream: the same seeded
     request produces the same tokens no matter how it is batched.
+    ``speculative=False`` opts this request out of speculative decoding on
+    engines that enable it (streams are identical either way — the
+    ``(seed, token_index)``-keyed sampler makes acceptance exact — so this
+    is a latency/throughput knob, not a quality one).
     """
 
     temperature: float = 0.0
@@ -79,6 +83,7 @@ class SamplingParams:
     stop_tokens: tuple[int, ...] = ()
     max_new_tokens: int = 16
     seed: int | None = None
+    speculative: bool = True
 
     def __post_init__(self):
         if not isinstance(self.stop_tokens, tuple):

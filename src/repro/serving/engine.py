@@ -70,6 +70,7 @@ from repro.serving.kv_cache import PagedKVCache, cdiv
 from repro.serving.kv_tiers import KVTierManager
 from repro.serving.metrics import UtilizationMetrics
 from repro.serving.scheduler import Scheduler, Sequence
+from repro.serving.speculative import SPEC_MODES, build_proposer
 
 __all__ = [
     "ContinuousBatchingEngine",
@@ -303,6 +304,10 @@ class ContinuousBatchingEngine(EngineBase):
         kv_tiers: bool | None = None,
         host_pages: int = 0,
         persist_dir: str | None = None,
+        speculative: str = "off",
+        spec_k: int = 4,
+        draft_config=None,
+        draft_params=None,
     ):
         assert not cfg.is_encoder_decoder, "paged engine is decoder-only"
         assert cfg.family in ("dense", "moe", "vlm"), (
@@ -372,10 +377,39 @@ class ContinuousBatchingEngine(EngineBase):
         )
         self.model = self.executor.model
         self.params = self.executor.params
+        # speculative decoding: a proposer drafts spec_k tokens per
+        # decoding slot; the executor verifies each bundle in one fused
+        # dispatch; rejected tails roll back by rewinding sequence length
+        if speculative not in SPEC_MODES:
+            raise ValueError(
+                f"speculative must be one of {SPEC_MODES}, got {speculative!r}"
+            )
+        if spec_k < 1:
+            raise ValueError(f"spec_k must be >= 1, got {spec_k}")
+        self.spec_mode = speculative
+        self.spec_k = spec_k
+        self.spec = None
+        if speculative != "off":
+            if cfg.family not in ("dense", "moe"):
+                raise ValueError(
+                    f"speculative decoding needs the paged chunk path; "
+                    f"family {cfg.family!r} has none"
+                )
+            if step_mode != "fused":
+                raise ValueError(
+                    "speculative decoding requires step_mode='fused'"
+                )
+            self.spec = build_proposer(
+                speculative, draft_config=draft_config,
+                draft_params=draft_params, max_slots=max_slots,
+                max_len=max_len, page_size=page_size, seed=seed,
+                attn_impl=attn_impl,
+            )
         self._init_api(admission=admission, seed=seed)
         self.utilization = UtilizationMetrics()
         self.stats.update({"decode_steps": 0, "prefills": 0,
-                           "prefill_chunks": 0, "preemptions": 0})
+                           "prefill_chunks": 0, "preemptions": 0,
+                           "spec_bundles": 0})
 
     # ------------------------------------------------------------------
     # EngineBase hooks
@@ -391,11 +425,20 @@ class ContinuousBatchingEngine(EngineBase):
                 f"{self.cache.num_pages - 1} — it could never be scheduled"
             )
 
+    def _release_slot(self, slot: int) -> Sequence:
+        """Release a slot and retire any proposer state for its uid —
+        every engine-side release funnels through here so a finished or
+        cancelled request can never leak a draft-cache slot."""
+        seq = self.scheduler.release(slot)
+        if self.spec is not None:
+            self.spec.retire(seq.request.uid)
+        return seq
+
     def _cancel_active(self, uid: str) -> bool:
         slot = self.scheduler.find(uid)
         if slot is None:
             return False
-        seq = self.scheduler.release(slot)
+        seq = self._release_slot(slot)
         self._finish_handle(seq.handle, FinishReason.CANCELLED)
         return True
 
@@ -423,7 +466,7 @@ class ContinuousBatchingEngine(EngineBase):
         if self._deliver(seq.handle, tok, 0, now):
             # finish event lands in THIS step's batch (admit/prefill run
             # before the decode harvest) — not delayed to the next one
-            self.scheduler.release(slot)
+            self._release_slot(slot)
 
     def _admit(self) -> int:
         now = time.perf_counter()
@@ -461,6 +504,8 @@ class ContinuousBatchingEngine(EngineBase):
         pressure: requeue transparently (already-streamed deltas are never
         re-emitted) or finish ``preempted`` past ``max_preemptions``."""
         self.stats["preemptions"] += 1
+        if self.spec is not None:
+            self.spec.retire(seq.request.uid)
         h = seq.handle
         h.preemptions += 1
         if (self.max_preemptions is not None
@@ -525,6 +570,67 @@ class ContinuousBatchingEngine(EngineBase):
                 persisted=t.persisted_count, counters=t.counters,
             )
 
+    # ------------------------------------------------------------------
+    # speculative decoding
+    # ------------------------------------------------------------------
+    def _propose_bundles(self) -> dict[int, list[int]]:
+        """Ask the proposer for drafts for every decoding slot. ``k`` is
+        capped so a fully-accepted bundle can neither overshoot the
+        request's validated worst-case page budget (context + k + 1 must
+        stay within max_pages_per_seq) nor draft past max_new_tokens
+        (tokens beyond the finish are pure waste)."""
+        out: dict[int, list[int]] = {}
+        cache = self.cache
+        ctx_cap = cache.max_pages_per_seq * cache.page_size
+        for slot, seq in self.scheduler.decoding():
+            sp = seq.request.sampling
+            if not sp.speculative:
+                continue
+            k = min(self.spec_k,
+                    sp.max_new_tokens - len(seq.tokens) - 1,
+                    ctx_cap - int(cache.lengths[slot]) - 1)
+            if k < 1:
+                continue
+            history = list(seq.request.prompt) + seq.tokens
+            drafts = self.spec.propose(seq.request.uid, history, k)
+            if drafts:
+                out[slot] = drafts[:k]
+        return out
+
+    def _harvest_bundle(self, bundle, now: float) -> None:
+        """Dispatch one verify bundle and commit its outcome.
+
+        The verify step sampled a token for every bundle row under the
+        same ``(seed, token_index)`` key sequential decode would have
+        used, so acceptance is a pure host-side comparison: ``a`` = length
+        of the leading run where the sampled token equals the draft. Rows
+        0..a hold KV for tokens the sampler itself produced — commit
+        advances the cached length to ``start + a + 1`` and the rejected
+        tail is rewound by never advancing past it (append-only pages:
+        nothing to free, nothing published — ``register_prefix`` only runs
+        during prefill). ``sampled[a]`` is the bonus/correction token; its
+        KV is not cached yet, exactly like a plain decode step's newest
+        token. Emission goes through the same ``_deliver`` path as plain
+        decode, so stop/length finishes mid-bundle release the slot and
+        drop the unemitted remainder."""
+        sched = self.scheduler
+        toks = self.executor.verify(bundle)
+        k = len(bundle.drafts)
+        a = 0
+        while a < k and int(toks[a]) == bundle.drafts[a]:
+            a += 1
+        sched.commit_speculation(bundle.slot, bundle.start + a + 1)
+        self.stats["spec_bundles"] += 1
+        self.utilization.record_spec(proposed=k, accepted=a,
+                                     rollbacks=k - a)
+        seq = bundle.seq
+        for j in range(a + 1):
+            tok = int(toks[j])
+            sched.append_speculated(bundle.slot, tok)
+            if self._deliver(seq.handle, tok, len(seq.tokens) - 1, now):
+                self._release_slot(bundle.slot)
+                break
+
     def _step_fused(self) -> list[StreamEvent]:
         sched = self.scheduler
         # publish last step's prefetched pages BEFORE admission matches
@@ -543,8 +649,13 @@ class ContinuousBatchingEngine(EngineBase):
 
         # every decode row needs a writable page BEFORE the plan captures
         # block tables (growth/COW dirties them; eviction can also claim
-        # the slot a chunk would have targeted)
-        for seq in sched.ensure_decode_capacity():
+        # the slot a chunk would have targeted). Speculating slots pre-grow
+        # k extra positions so the verify dispatch never hits a page fault.
+        proposals = (self._propose_bundles()
+                     if self.spec is not None else {})
+        extra = ({s: len(d) for s, d in proposals.items()}
+                 if proposals else None)
+        for seq in sched.ensure_decode_capacity(extra=extra):
             self._handle_preempted(seq)
         if not sched.has_decodable():
             return self._drain_events()  # preemption can empty the decode set
@@ -554,8 +665,18 @@ class ContinuousBatchingEngine(EngineBase):
         self.utilization.record(active=decoding, slots=slots,
                                 pages_used=used, pages_total=total)
         self._record_tiers()
-        plan = sched.build_step_plan()
-        toks = self._dispatch_plan(plan)
+        # eviction may have dropped a proposal's sequence — bundle only
+        # slots that still hold the decoding sequence we drafted for
+        bundles = [
+            sched.build_spec_bundle(s, d, self.spec_k + 1)
+            for s, d in sorted(proposals.items())
+            if sched.slots.get(s) is not None
+            and sched.slots[s].phase == "decode"
+        ]
+        plan = sched.build_step_plan(spec=bundles)
+        toks = None
+        if plan.decode_slots or plan.chunk is not None:
+            toks = self._dispatch_plan(plan)
         self.stats["decode_steps"] += 1
         now = time.perf_counter()
         # harvest exactly the slots the plan dispatched — the chunk slot
@@ -565,7 +686,10 @@ class ContinuousBatchingEngine(EngineBase):
             tok = int(toks[slot])
             sched.append_decoded(slot, tok)
             if self._deliver(seq.handle, tok, len(seq.tokens) - 1, now):
-                sched.release(slot)
+                self._release_slot(slot)
+        # bundled slots step through their verify dispatch instead
+        for bundle in plan.spec or ():
+            self._harvest_bundle(bundle, now)
         self._record_tiers()  # post-release: captures end-of-life parking
         return self._drain_events()
 
@@ -605,6 +729,6 @@ class ContinuousBatchingEngine(EngineBase):
             tok = int(toks[slot])
             sched.append_decoded(slot, tok)
             if self._deliver(seq.handle, tok, len(seq.tokens) - 1, now):
-                sched.release(slot)
+                self._release_slot(slot)
         self._record_tiers()  # post-release: captures end-of-life parking
         return self._drain_events()

@@ -219,6 +219,7 @@ class ModelExecutor:
         self._mixed_fns: dict[bool, object] = {}
         self._chunk_fn = None
         self._prefill_fns: dict[int, object] = {}
+        self._verify_fns: dict[bool, object] = {}
         # device mirrors of the last decode batch, PACKED into one int32
         # and one f32 array (refreshed only when the scheduler reports a
         # composition change). Packing matters off-TPU: per-transfer
@@ -470,6 +471,90 @@ class ModelExecutor:
         )
         self.cache.swap_pages(pages)
         return np.asarray(toks), int(ctok)
+
+    # ------------------------------------------------------------------
+    # speculative verify (one bundle = one fused dispatch)
+    # ------------------------------------------------------------------
+    # Packed bundle ``vi`` (MP+W+5,) int32 = [block-table row | padded
+    # tokens | start, valid, top_k, seed, idx0] and ``vf`` (2,) f32 =
+    # [temperature, top_p] — the chunk packing plus the base token index,
+    # which keys each row's sample.
+    def _verify_fn(self, greedy_only: bool):
+        """ONE dispatch scores a whole speculation bundle: the sharded
+        verify forward (``models/lm.py::verify_step_paged`` — a k+1-row
+        chunk over the slot's own block table) plus per-row sampling,
+        fused so logits never leave the device. Row j samples with the
+        request's ``(seed, idx0 + j)`` key — the SAME key a sequential
+        decode loop would use for token index ``idx0 + j`` — which is the
+        whole acceptance argument: where the drafted prefix matches what
+        sequential decoding would have produced, the logits match, the
+        keys match, and therefore the samples match (greedy rows are a
+        plain argmax, so greedy streams are byte-identical by
+        construction). ``greedy_only`` picks the argmax compile exactly
+        like the decode/mixed steps."""
+        if greedy_only not in self._verify_fns:
+            cfg = self.cfg
+            mp = self.cache.block_tables.shape[1]
+
+            def fn(params, pages, vi, vf):
+                w = vi.shape[0] - mp - 5
+                row, tokens = vi[:mp], vi[mp:mp + w]
+                start, valid = vi[mp + w], vi[mp + w + 1]
+                with self._tp_ctx():
+                    pages, logits = self.model.verify_step_paged(
+                        params, pages, row, tokens, start, valid,
+                    )  # (W, Vp): row j scores token index idx0 + j
+                    if greedy_only:
+                        toks = jnp.argmax(
+                            logits[..., :cfg.vocab_size], axis=-1
+                        ).astype(jnp.int32)
+                    else:
+                        ones = jnp.ones((w,), jnp.float32)
+                        toks = sample_tokens(
+                            logits, vf[0] * ones,
+                            jnp.broadcast_to(vi[mp + w + 2], (w,)),
+                            vf[1] * ones,
+                            jnp.broadcast_to(vi[mp + w + 3], (w,)),
+                            vi[mp + w + 4] + jnp.arange(w, dtype=jnp.int32),
+                            cfg.vocab_size,
+                        )
+                return pages, toks
+
+            page_specs = self._page_specs()
+            smapped = self._smap(
+                fn,
+                in_specs=(self.param_specs, page_specs) + (P(),) * 2,
+                out_specs=(page_specs, P()),
+            )
+            self._verify_fns[greedy_only] = jax.jit(
+                smapped, donate_argnums=(1,)
+            )
+        return self._verify_fns[greedy_only]
+
+    def verify(self, bundle) -> np.ndarray:
+        """Dispatch one speculation bundle (``scheduler.SpecBundle``).
+        Returns the sampled token per bundle row, (W,) int32 on the host
+        — row 0 is the true next token, row j (j < valid) the true token
+        IF rows < j were all accepted; rows past ``valid`` are garbage
+        the engine ignores. The dispatch also scattered the bundle's k+1
+        candidate KV positions; the engine commits the accepted prefix by
+        setting the slot's length (rollback = rewind, nothing else)."""
+        sp = bundle.seq.request.sampling
+        row = self.cache.block_tables[bundle.slot]
+        mp, w = row.shape[0], bundle.tokens.shape[0]
+        vi = np.empty(mp + w + 5, np.int32)
+        vi[:mp] = row
+        vi[mp:mp + w] = bundle.tokens
+        vi[mp + w:] = (bundle.start, bundle.valid, sp.top_k,
+                       bundle.seq.handle.seed, len(bundle.seq.tokens))
+        vf = np.array([sp.temperature, sp.top_p], np.float32)
+        fn = self._verify_fn(sp.temperature <= 0.0)
+        pages, toks = fn(
+            self.params, dict(self.cache.pages),
+            jnp.asarray(vi), jnp.asarray(vf),
+        )
+        self.cache.swap_pages(pages)
+        return np.asarray(toks)
 
     # ------------------------------------------------------------------
     # chunked prefill

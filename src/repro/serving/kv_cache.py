@@ -547,33 +547,44 @@ class PagedKVCache:
         self.lengths[slot] = self.lengths[src_slot]
         return slot
 
-    def ensure_append_capacity(self, slot: int) -> bool:
-        """Make sure position ``lengths[slot]`` is writable before a decode
-        step lands there: allocates a page at page boundaries (on-demand
-        growth) and copy-on-writes a shared page anywhere else. Returns True
+    def ensure_append_capacity(self, slot: int, n: int = 1) -> bool:
+        """Make sure positions ``lengths[slot] .. lengths[slot]+n-1`` are
+        writable before a dispatch lands there: allocates a page at page
+        boundaries (on-demand growth) and copy-on-writes a shared page
+        anywhere else. ``n=1`` is the plain decode step; a speculative
+        verify bundle passes ``n = k+1`` so every drafted position is
+        writable BEFORE the single fused dispatch scatters them (rollback
+        then only rewinds ``lengths`` — over-provisioned tail pages stay
+        owned by the slot and are reused by the next append). Returns True
         when the block table changed; raises RuntimeError when the pool is
         exhausted (callers may preempt) — with tiers attached, parked pages
-        are reclaimed first, so preemption is truly the last resort."""
-        need = int(self.lengths[slot]) // self.page_size
+        are reclaimed first, so preemption is truly the last resort. On a
+        mid-range RuntimeError the pages already granted remain recorded in
+        the slot's table (no leak; the caller retries or preempts)."""
+        changed = False
+        length = int(self.lengths[slot])
         pages = self._slot_pages[slot]
-        if need == len(pages):
-            (new,) = self._alloc(1)
-            pages.append(new)
-            self.block_tables[slot, need] = new
-            return True
-        old = pages[need]
-        if self.pool.refcounts[old] > 1:  # shared: copy before the write
-            (new,) = self._alloc(1)
-            self.pages = _copy_page(
-                self.pages,
-                jnp.asarray(old, jnp.int32), jnp.asarray(new, jnp.int32),
-            )
-            self.pool.decref(old)  # shared, so never frees here
-            pages[need] = new
-            self.block_tables[slot, need] = new
-            self.stats["cow_copies"] += 1
-            return True
-        return False
+        for pos in range(length, length + n):
+            need = pos // self.page_size
+            if need == len(pages):
+                (new,) = self._alloc(1)
+                pages.append(new)
+                self.block_tables[slot, need] = new
+                changed = True
+                continue
+            old = pages[need]
+            if self.pool.refcounts[old] > 1:  # shared: copy before the write
+                (new,) = self._alloc(1)
+                self.pages = _copy_page(
+                    self.pages,
+                    jnp.asarray(old, jnp.int32), jnp.asarray(new, jnp.int32),
+                )
+                self.pool.decref(old)  # shared, so never frees here
+                pages[need] = new
+                self.block_tables[slot, need] = new
+                self.stats["cow_copies"] += 1
+                changed = True
+        return changed
 
     def append(self, slot: int) -> None:
         """Record that the decode step wrote one token for this slot."""

@@ -25,6 +25,11 @@ percentile/format logic used by ``launch/serve.py`` and
   KVTierManager` counters (tier hits, spill/prefetch bytes and seconds).
   This answers whether prefix reuse is actually landing (device vs host vs
   persisted hits) and what the spill traffic costs.
+* **Speculation counters** (``record_spec``) — per-bundle proposed/
+  accepted/rolled-back token counts. The acceptance rate is THE health
+  metric for speculative decoding: the verify dispatch costs roughly one
+  decode step regardless of k, so tokens/step ≈ 1 + accepted/bundle, and
+  a rate near zero means speculation is pure overhead for this workload.
 """
 
 from __future__ import annotations
@@ -58,6 +63,11 @@ class UtilizationMetrics:
         self.persist_samples: list[int] = []
         self._tier_latest: dict | None = None
         self._tier_merged: dict = {}
+        # speculative decoding counters (additive, per verify bundle)
+        self.spec_bundles = 0
+        self.spec_proposed = 0
+        self.spec_accepted = 0
+        self.spec_rollbacks = 0
 
     def record(self, *, active: int, slots: int,
                pages_used: int | None = None,
@@ -89,6 +99,19 @@ class UtilizationMetrics:
         self.persist_samples.append(persisted)
         self._tier_latest = dict(counters)
 
+    def record_spec(self, *, proposed: int, accepted: int,
+                    rollbacks: int) -> None:
+        """Record one speculation bundle's outcome: ``proposed`` drafted
+        tokens went into the verify dispatch, the leading ``accepted`` of
+        them matched what the sampler produced, and the ``rollbacks``
+        rejected tail positions were rewound (the bonus/correction token
+        on top of ``accepted`` is a plain decode token, not counted
+        here)."""
+        self.spec_bundles += 1
+        self.spec_proposed += proposed
+        self.spec_accepted += accepted
+        self.spec_rollbacks += rollbacks
+
     def _tier_deltas(self) -> dict:
         """This tracker's counter totals plus anything merged in."""
         out = dict(self._tier_merged)
@@ -110,6 +133,10 @@ class UtilizationMetrics:
         self.persist_samples.extend(other.persist_samples)
         for key, val in other._tier_deltas().items():
             self._tier_merged[key] = self._tier_merged.get(key, 0) + val
+        self.spec_bundles += other.spec_bundles
+        self.spec_proposed += other.spec_proposed
+        self.spec_accepted += other.spec_accepted
+        self.spec_rollbacks += other.spec_rollbacks
 
     @property
     def steps(self) -> int:
@@ -153,6 +180,18 @@ class UtilizationMetrics:
                         + t.get("persist_hits", 0))
                 t["tier_hit_pages_per_query"] = hits / q
             out["kv_tiers"] = t
+        if self.spec_bundles:
+            out["speculation"] = {
+                "bundles": self.spec_bundles,
+                "tokens_proposed": self.spec_proposed,
+                "tokens_accepted": self.spec_accepted,
+                "rollbacks": self.spec_rollbacks,
+                "acceptance_rate": (self.spec_accepted
+                                    / max(self.spec_proposed, 1)),
+                # +1: each bundle also emits its bonus/correction token
+                "tokens_per_bundle": (self.spec_accepted / self.spec_bundles
+                                      + 1.0),
+            }
         return out
 
     def format(self) -> str:
@@ -182,6 +221,14 @@ class UtilizationMetrics:
                     f"/pv{t.get('persist_hits', 0)}"
                     f";spilled={t.get('spilled_pages', 0)}"
                     f";prefetched={t.get('prefetched_pages', 0)}")
+        if "speculation" in s:
+            sp = s["speculation"]
+            txt += (f";spec=bundles{sp['bundles']}"
+                    f"/prop{sp['tokens_proposed']}"
+                    f"/acc{sp['tokens_accepted']}"
+                    f"/rb{sp['rollbacks']}"
+                    f";accept_rate={sp['acceptance_rate']:.0%}"
+                    f";tok_per_bundle={sp['tokens_per_bundle']:.2f}")
         return txt
 
 

@@ -36,6 +36,7 @@ __all__ = [
     "PrefillChunk",
     "Scheduler",
     "Sequence",
+    "SpecBundle",
     "StepPlan",
 ]
 
@@ -85,6 +86,24 @@ class DecodeInputs:
 
 
 @dataclass
+class SpecBundle:
+    """One speculation bundle: chunk-style verify rows for ONE decoding
+    slot. Row 0 feeds the last committed token (whose KV is not yet
+    cached — exactly what a plain decode row would feed), rows 1..k feed
+    the proposer's drafts; the executor scores all of them in one fused
+    dispatch over the slot's own block table at positions
+    ``start .. start+valid-1``. ``tokens`` is padded to the static bundle
+    width (``spec_k + 1``) so the jitted verify step never recompiles."""
+
+    slot: int
+    seq: Sequence
+    tokens: np.ndarray   # (W,) int32 padded [t_last, d_1 .. d_k]
+    start: int           # cache length L before the bundle dispatched
+    valid: int           # 1 + k live rows
+    drafts: list[int]    # the k proposed tokens (unpadded)
+
+
+@dataclass
 class StepPlan:
     """Everything one fused engine step dispatches: the decode batch plus at
     most one token-budgeted prefill chunk, all with static padded shapes
@@ -97,13 +116,20 @@ class StepPlan:
     from a dispatch it was not part of. ``decode`` is None when the device
     mirrors are already current (the steady-state zero-transfer path).
     ``step_tokens`` is the plan's token-budget spend: one per decode row
-    plus the chunk's valid tokens.
+    plus the chunk's valid tokens plus each spec bundle's live rows.
+
+    ``spec`` carries this step's speculation bundles (at most one per
+    decoding slot): each is ONE work item the executor scores with one
+    fused verify dispatch. Bundled slots are excluded from
+    ``decode_slots`` and masked in the decode batch — their step happens
+    through the bundle, never twice.
     """
 
     decode_slots: list[int]
     decode: DecodeInputs | None
     chunk: PrefillChunk | None
     step_tokens: int
+    spec: list[SpecBundle] = None  # None == no speculation this step
 
 
 class Scheduler:
@@ -300,13 +326,21 @@ class Scheduler:
         slot = max(self.slots, key=lambda s: self.slots[s].order)
         return slot, self.release(slot)
 
-    def ensure_decode_capacity(self) -> list[Sequence]:
+    def ensure_decode_capacity(
+        self, extra: dict[int, int] | None = None
+    ) -> list[Sequence]:
         """Give every DECODING slot a writable page for its next position —
         growing at page boundaries, copying a shared (refcount > 1) page
         anywhere else — evicting the youngest sequences if the pool runs
-        dry. A lone sequence can always grow (submit rejects requests that
-        exceed the whole pool), so this terminates with at least one slot
-        making progress. Returns the evicted sequences (pages already
+        dry. ``extra[slot]`` requests that many positions BEYOND the next
+        one: a speculative verify bundle scatters k+1 candidate positions
+        in one dispatch, so every one of them must be writable up front
+        (rollback then never has to un-allocate — it only rewinds the
+        length, and over-provisioned tail pages stay owned by the slot).
+        A lone sequence can always grow (submit rejects requests that
+        exceed the whole pool, and the engine caps drafts at the request's
+        validated max_new budget), so this terminates with at least one
+        slot making progress. Returns the evicted sequences (pages already
         released) for the engine's preemption bookkeeping."""
         preempted: list[Sequence] = []
         order = sorted(
@@ -314,12 +348,16 @@ class Scheduler:
             key=lambda s: self.slots[s].order,
         )
         for slot in order:
+            n = 1 + (extra.get(slot, 0) if extra else 0)
             while slot in self.slots:
                 try:
-                    if self.cache.ensure_append_capacity(slot):
+                    if self.cache.ensure_append_capacity(slot, n):
                         self._mark(slot)  # table grew or a page was COWed
                     break
                 except RuntimeError:
+                    # pages granted before the failure are already in the
+                    # table; the retry (or eviction) sees them as owned
+                    self._mark(slot)
                     preempted.append(self.evict_youngest()[1])
         return preempted
 
@@ -393,18 +431,69 @@ class Scheduler:
         )
 
     # ------------------------------------------------------------------
+    # speculation bundles
+    # ------------------------------------------------------------------
+    def build_spec_bundle(self, slot: int, drafts: list[int],
+                          width: int) -> SpecBundle:
+        """Package a proposer's drafts for one decoding slot as a verify
+        work item: row 0 is the slot's last committed token (same feed as
+        its plain decode row), rows 1..k the drafts, padded to the static
+        ``width`` (= spec_k + 1). The caller must already have ensured
+        append capacity for ``1 + len(drafts)`` positions."""
+        seq = self.slots[slot]
+        assert seq.phase == "decode" and seq.tokens, (slot, seq.phase)
+        assert 0 < len(drafts) < width, (len(drafts), width)
+        toks = np.zeros((width,), np.int32)
+        toks[0] = seq.tokens[-1]
+        toks[1:1 + len(drafts)] = drafts
+        return SpecBundle(
+            slot=slot, seq=seq, tokens=toks,
+            start=int(self.cache.lengths[slot]),
+            valid=1 + len(drafts), drafts=list(drafts),
+        )
+
+    def append_speculated(self, slot: int, token: int) -> None:
+        """Record one accepted/bonus token from a verify bundle. Unlike
+        :meth:`append_decoded` this does NOT advance the mirrors — the
+        verify dispatch never touches the decode batch's device copies,
+        so :meth:`commit_speculation` re-dirties the whole row instead."""
+        self.slots[slot].tokens.append(token)
+
+    def commit_speculation(self, slot: int, length: int) -> None:
+        """Finalize a verify bundle for a slot that keeps decoding: set
+        the cache length to the accepted prefix + the committed row
+        (REWINDING the rejected tail — pages are append-only per slot, so
+        rejected positions simply fall out of the attention mask and the
+        next append overwrites them in place) and dirty the mirror row so
+        the next decode batch re-uploads host truth."""
+        assert length >= int(self.cache.lengths[slot]), (
+            length, int(self.cache.lengths[slot]))  # never below the start
+        self.cache.lengths[slot] = length
+        self._mark(slot)
+
+    # ------------------------------------------------------------------
     # fused step plan
     # ------------------------------------------------------------------
-    def build_step_plan(self) -> StepPlan:
+    def build_step_plan(self, spec: list[SpecBundle] | None = None
+                        ) -> StepPlan:
         """Assemble ONE fused step: the full decode batch plus at most one
         prefill chunk, under the token budget (one token per decode row;
         the chunk's live tokens fill what remains — Sarathi-style, so an
         operator can trade TTFT for ITL tail). With no decode rows in
         flight the budget is waived (a chunk always makes progress; cold
         start cannot stall). ``decode`` is None on the steady-state path
-        (device mirrors current); shapes are static either way."""
+        (device mirrors current); shapes are static either way.
+
+        ``spec`` lists this step's speculation bundles: their slots leave
+        ``decode_slots`` and are masked to the null page in the decode
+        batch (their step happens through the verify dispatch instead —
+        never twice), and their live rows count against ``step_tokens``.
+        Masking mutates only the returned copies; the mirrors stay true
+        and the slot is re-marked dirty for the next plain build."""
+        spec = spec or []
+        spec_slots = {b.slot for b in spec}
         decode_slots = [s for s, q in sorted(self.slots.items())
-                        if q.phase == "decode"]
+                        if q.phase == "decode" and s not in spec_slots]
         limit = width = None
         if self.token_budget is not None and decode_slots:
             # The chunk buffer is sized to what the budget can actually
@@ -416,13 +505,26 @@ class Scheduler:
             limit = width = max(0, self.token_budget - len(decode_slots))
         chunk = (self.next_prefill(limit=limit, width=width)
                  if self.chunked else None)
-        decode = (self.build_decode_inputs()
-                  if decode_slots and self.dirty else None)
+        decode = None
+        if decode_slots:
+            if spec_slots:
+                decode = self.build_decode_inputs()
+                for s in spec_slots:
+                    decode.active[s] = 0
+                    decode.block_tables[s] = NULL_PAGE
+                    decode.lengths[s] = 0
+                    self._mark(s)  # device copy now diverges from mirror
+                act = decode.active.astype(bool)
+                decode.greedy_only = bool((decode.temps[act] <= 0.0).all())
+            elif self.dirty:
+                decode = self.build_decode_inputs()
         return StepPlan(
             decode_slots=decode_slots,
             decode=decode,
             chunk=chunk,
-            step_tokens=len(decode_slots) + (chunk.valid if chunk else 0),
+            step_tokens=(len(decode_slots) + (chunk.valid if chunk else 0)
+                         + sum(b.valid for b in spec)),
+            spec=spec,
         )
 
     # ------------------------------------------------------------------

@@ -407,6 +407,81 @@ def test_paged_mixed_structured_xla_matches_oracle():
 
 
 # ---------------------------------------------------------------------------
+# speculative verify (k drafted tokens scored through the chunk path)
+# ---------------------------------------------------------------------------
+# params reuse the prefill tuple: (c, start, valid, h, kvh, d, page, extra)
+#   c = bundle width W (spec_k+1, padded), valid = 1 + k live rows,
+#   start = the sequence's cached length L when the bundle dispatched
+
+
+def _verify_sweep():
+    cases = []
+    rng = np.random.default_rng(0x5BEC)
+    for k in range(1, 9):  # the engine's full draft-depth range
+        start = int(rng.integers(1, 25))
+        cases.append((k + 1, start, k + 1, 4, 2, 16, 8, 1))
+        if k > 1:  # padded bundle: fewer drafts than the compiled width
+            cases.append((k + 2, start, k + 1, 4, 2, 16, 8, 0))
+    return cases
+
+
+@pytest.mark.parametrize("params", _verify_sweep(),
+                         ids=lambda p: "c{}s{}v{}h{}k{}d{}p{}x{}".format(*p))
+def test_paged_verify_equals_decode_loop(params):
+    """The verify contract, end to end: scoring a k-draft bundle through
+    the chunk path (``models/lm.py::verify_step_paged`` lowers through
+    ``ops.paged_prefill_attention``) must equal BOTH the dedicated
+    ``paged_verify_attention_ref`` oracle and a k+1-iteration single-token
+    decode loop over the same pages — the unrolled sequential decode the
+    bundle replaces. COW-forked tables included: speculation runs on
+    post-fork sequences too. Rows past ``valid`` are exact zeros (the
+    executor pads every bundle to the compiled width)."""
+    for seed, forked in ((0, False), (1, True)):
+        q, kp, vp, bt, start, valid = _prefill_case(params, seed, forked)
+        want = ref.paged_verify_attention_ref(q, kp, vp, bt, start, valid)
+        chunk = ops.paged_prefill_attention(q, kp, vp, bt, start, valid,
+                                            impl="pallas_interpret")
+        _assert_close(chunk, want, params + (seed,), "verify_vs_chunk")
+        mixed = ops.paged_mixed_attention(
+            q, kp, vp, jnp.broadcast_to(bt, (q.shape[0],) + bt.shape),
+            jnp.where(jnp.arange(q.shape[0]) < valid,
+                      start + jnp.arange(q.shape[0]), -1).astype(jnp.int32),
+            impl="pallas_interpret",
+        )
+        _assert_close(mixed, want, params + (seed,), "verify_vs_mixed")
+        for j in range(int(valid)):  # the decode loop the bundle replaces
+            dec = ops.paged_attention(
+                q[j][None], kp, vp, bt[None],
+                jnp.asarray([int(start) + j + 1], jnp.int32),
+                impl="xla_chunked",
+            )[0]
+            _assert_close(dec, want[j], params + (seed, j),
+                          "verify_vs_decode_loop")
+        assert (np.asarray(want)[int(valid):] == 0).all(), (
+            f"padded verify rows must be exact zeros at {params}")
+
+
+def test_paged_verify_invariant_to_page_relocation():
+    """Preempt-and-resume re-admits a sequence into different physical
+    pages; verify must depend only on table-addressed content, so moving
+    a page and repointing the block table cannot change a single logit."""
+    params = (5, 11, 5, 4, 2, 16, 8, 1)
+    q, kp, vp, bt, start, valid = _prefill_case(params, seed=9)
+    base = ref.paged_verify_attention_ref(q, kp, vp, bt, start, valid)
+    kp2, vp2 = np.asarray(kp).copy(), np.asarray(vp).copy()
+    bt2 = np.asarray(bt).copy()
+    live = [p for p in bt2.tolist() if p != NULL_PAGE]
+    spare = next(p for p in range(1, kp2.shape[0]) if p not in live)
+    kp2[spare], vp2[spare] = kp2[live[0]], vp2[live[0]]
+    bt2[np.asarray(bt).tolist().index(live[0])] = spare
+    moved = ops.paged_prefill_attention(
+        q, jnp.asarray(kp2), jnp.asarray(vp2), jnp.asarray(bt2),
+        start, valid, impl="pallas_interpret",
+    )
+    _assert_close(moved, base, params, "verify_page_relocation")
+
+
+# ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------
 

@@ -392,6 +392,99 @@ def test_quantized_engine_invariants_and_determinism(smollm, seed):
             assert h.tokens == want, uid
 
 
+def _check_spec_invariants(engine: ContinuousBatchingEngine) -> None:
+    """Full paged sweep + the speculation-specific page-publication rule:
+    pages grown during decode — which is where speculative bundles write
+    their (possibly later-rejected) KV — must NEVER appear in the prefix
+    index, and therefore can never park in the tiers either (parking only
+    ever takes registered pages). Only full pages inside the PROMPT are
+    legal index entries; everything past the prompt is decode-written and
+    rollback means its content is unreliable beyond the committed length."""
+    _check_paged_invariants(engine)
+    cache, sched = engine.cache, engine.scheduler
+    for slot, seq in sched.slots.items():
+        prompt_pages = len(seq.request.prompt) // cache.page_size
+        for i, p in enumerate(cache._slot_pages[slot]):
+            if i >= prompt_pages:
+                assert p not in cache._page_key, (
+                    f"slot {slot}: decode-phase page {p} (index {i}) was "
+                    f"published to the prefix index"
+                )
+
+
+class _AdversarialProposer:
+    """Proposes k uniformly random drafts for every slot, every step:
+    bundles always dispatch and essentially every draft is rejected —
+    maximum rollback pressure, interleaved with preemption and tiers."""
+
+    def __init__(self, seed: int):
+        self.rng = np.random.default_rng(seed)
+
+    def propose(self, uid, history, k):
+        return [int(t) for t in self.rng.integers(1, 250, k)]
+
+    def retire(self, uid):
+        return None
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+@pytest.mark.parametrize("mode", ["ngram", "draft", "adversarial"])
+def test_speculative_engine_streams_and_invariants(smollm, seed, mode,
+                                                   tmp_path):
+    """Speculative arm of the stress trace.
+
+    The same perturbed submit/cancel schedule runs with speculation on and
+    the page pool sized to force preemption; after every step the full
+    paged sweep must hold PLUS the publication rule (no decode-written —
+    hence no partially-accepted — page in the prefix index or the tiers),
+    and at drain every surviving stream must be byte-identical to a
+    spec-OFF unperturbed replay: acceptance is exact under the
+    ``(seed, token_index)``-keyed sampler, for the mixed greedy/sampled
+    trace alike. Three proposer arms: ``ngram`` (the production
+    self-speculation path, run with host+persist tiers engaged so
+    speculation interleaves with park/spill/reclaim), ``draft`` (drafting
+    with the TARGET's own weights — oracle draft, so acceptance is high
+    and the multi-token commit path is exercised), and ``adversarial``
+    (an injected proposer drafting random tokens every step — every
+    bundle rolls back, so a single leaked or double-freed rollback page
+    would trip the partition sweep within a step or two)."""
+    cfg, params = smollm
+    reqs, actions, _attempted = _make_trace(seed)
+    kw = dict(max_slots=4, page_size=PAGE, num_pages=8, prefill_chunk=PAGE,
+              prefix_sharing=True, seed=seed)
+    spec_kw = dict(speculative="ngram", spec_k=3)
+    if mode == "draft":
+        spec_kw = dict(speculative="draft", spec_k=3,
+                       draft_config=cfg, draft_params=params)
+    else:
+        kw.update(host_pages=16, persist_dir=str(tmp_path / "kv"))
+    engine = ContinuousBatchingEngine(cfg, params, max_len=MAX_LEN,
+                                      **kw, **spec_kw)
+    if mode == "adversarial":
+        engine.spec = _AdversarialProposer(seed)
+    handles, _, cancelled = _drive(engine, reqs, actions,
+                                   _check_spec_invariants)
+    u = engine.utilization
+    if mode == "adversarial":
+        assert engine.stats["spec_bundles"] > 0, "no bundle ever dispatched"
+        assert u.spec_rollbacks > 0, "rollback path unexercised"
+    elif mode == "draft":
+        assert engine.stats["spec_bundles"] > 0, "no bundle ever dispatched"
+        assert u.spec_accepted > 0, (
+            "oracle draft should land drafts: commit path unexercised")
+    _check_drained(engine.cache)
+
+    oracle = _replay(cfg, params, ContinuousBatchingEngine, reqs,
+                     max_slots=4, page_size=PAGE, prefill_chunk=PAGE,
+                     prefix_sharing=True, seed=seed)
+    for uid, h in handles.items():
+        want = oracle[uid].tokens
+        if uid in cancelled:
+            assert h.tokens == want[:len(h.tokens)], uid
+        else:
+            assert h.tokens == want, uid
+
+
 @pytest.mark.parametrize("seed", [0])
 def test_lockstep_engine_invariants_under_stress(smollm, seed):
     cfg, params = smollm
