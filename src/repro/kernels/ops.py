@@ -42,7 +42,7 @@ from repro.kernels.paged_attention import (
     paged_mixed_attention_rkgd,
     paged_prefill_attention_ckgd,
 )
-from repro.kernels.ssd_scan import ssd_scan_bhsp
+from repro.kernels.ssd_scan import ssd_decode_step_bh, ssd_scan_bhsp
 
 
 def _auto_impl() -> str:
@@ -337,41 +337,76 @@ def ssd_scan(
     chunk: int = 256,
     impl: str = "auto",
     interpret: bool = False,
+    init_state: jax.Array | None = None,  # (B, H, P, N) f32
 ) -> tuple[jax.Array, jax.Array]:
     """Chunked SSD scan. Returns (y (B,S,H,P), final_state (B,H,P,N) f32).
 
-    Handles S not divisible by ``chunk``: the bulk runs chunked, the
-    remainder runs the exact sequential recurrence carrying the state.
+    S need not divide ``chunk``: the tail is padded with dt=0 positions,
+    which are exact identities on the recurrence (decay exp(0·a)=1, update
+    dt·x=0), so one chunked dispatch covers any length and the padded
+    outputs are simply sliced off. ``init_state`` continues a scan from a
+    carried state (chunked prefill): the reference paths thread it
+    natively; the Pallas kernel always starts from zeros, so its linear
+    contribution — y_t += C_t·(e^{Σ≤t dA} h0), fs += e^{Σ dA} h0 — is
+    superposed in closed form on top of the kernel output.
     """
     if impl == "auto":
         impl = _auto_impl()
     impl, interpret = _resolve_pallas_impl(impl, interpret, "ssd_scan")
     if impl == "naive":
-        return ref.ssd_sequential(x, dt, A, Bm, Cm)
+        return ref.ssd_sequential(x, dt, A, Bm, Cm, init_state=init_state)
 
     s = x.shape[1]
     chunk_eff = min(chunk, s)
-    rem = s % chunk_eff
-    bulk = s - rem
+    pad = (chunk_eff - s % chunk_eff) % chunk_eff
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
 
-    def run_bulk(xb, dtb, bb, cb):
-        if impl == "xla_chunked":
-            return ref.ssd_chunked(xb, dtb, A, bb, cb, chunk=chunk_eff)
-        if impl == "pallas":
-            xt = jnp.swapaxes(xb, 1, 2)    # (B, H, S, P)
-            dtt = jnp.swapaxes(dtb, 1, 2)  # (B, H, S)
-            y, fs = ssd_scan_bhsp(xt, dtt, A, bb, cb, chunk=chunk_eff,
+    if impl == "xla_chunked":
+        y, fs = ref.ssd_chunked(x, dt, A, Bm, Cm, init_state, chunk=chunk_eff)
+        return (y[:, :s] if pad else y), fs
+    if impl == "pallas":
+        xt = jnp.swapaxes(x, 1, 2)    # (B, H, S, P)
+        dtt = jnp.swapaxes(dt, 1, 2)  # (B, H, S)
+        y, fs = ssd_scan_bhsp(xt, dtt, A, Bm, Cm, chunk=chunk_eff,
+                              interpret=interpret)
+        y = jnp.swapaxes(y, 1, 2)[:, :s]
+        if init_state is not None:
+            h0 = init_state.astype(jnp.float32)
+            dA = dt.astype(jnp.float32) * A.astype(jnp.float32)[None, None, :]
+            cs = jnp.cumsum(dA, axis=1)  # (B, S+pad, H)
+            proj = jnp.einsum(
+                "bsn,bhpn->bshp", Cm[:, :s].astype(jnp.float32), h0
+            )
+            y = (
+                y.astype(jnp.float32) + jnp.exp(cs[:, :s, :, None]) * proj
+            ).astype(x.dtype)
+            fs = fs + jnp.exp(cs[:, -1])[..., None, None] * h0
+        return y, fs
+    raise ValueError(f"unknown ssd impl {impl!r}")
+
+
+def ssd_decode_step(
+    state: jax.Array,  # (B, H, P, N) f32
+    x_t: jax.Array,    # (B, H, P)
+    dt_t: jax.Array,   # (B, H)
+    A: jax.Array,      # (H,)
+    B_t: jax.Array,    # (B, N)
+    C_t: jax.Array,    # (B, N)
+    *,
+    impl: str = "auto",
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Single-token SSD recurrence. Returns (y (B,H,P), new_state f32)."""
+    if impl == "auto":
+        impl = _auto_impl()
+    impl, interpret = _resolve_pallas_impl(impl, interpret, "ssd_decode_step")
+    if impl in ("naive", "xla_chunked"):
+        return ref.ssd_decode_step(state, x_t, dt_t, A, B_t, C_t)
+    if impl == "pallas":
+        return ssd_decode_step_bh(state, x_t, dt_t, A, B_t, C_t,
                                   interpret=interpret)
-            return jnp.swapaxes(y, 1, 2), fs
-        raise ValueError(f"unknown ssd impl {impl!r}")
-
-    if rem == 0:
-        return run_bulk(x, dt, Bm, Cm)
-    y0, st = run_bulk(x[:, :bulk], dt[:, :bulk], Bm[:, :bulk], Cm[:, :bulk])
-    y1, st = ref.ssd_sequential(
-        x[:, bulk:], dt[:, bulk:], A, Bm[:, bulk:], Cm[:, bulk:], init_state=st
-    )
-    return jnp.concatenate([y0, y1], axis=1), st
-
-
-ssd_decode_step = ref.ssd_decode_step
+    raise ValueError(f"unknown ssd decode impl {impl!r}")

@@ -126,3 +126,60 @@ def ssd_scan_bhsp(
         interpret=interpret,
     )(x, dt, A, Bm, Cm)
     return y, fs
+
+
+def _ssd_decode_kernel(s_ref, x_ref, dt_ref, a_ref, b_ref, c_ref,
+                       y_ref, ns_ref):
+    state = s_ref[0, 0]                              # (P, N) f32
+    x = x_ref[0, 0].astype(jnp.float32)              # (P,)
+    dt = dt_ref[0, 0].astype(jnp.float32)            # scalar
+    a = a_ref[0].astype(jnp.float32)                 # scalar
+    bm = b_ref[0].astype(jnp.float32)                # (N,)
+    cm = c_ref[0].astype(jnp.float32)                # (N,)
+    new = state * jnp.exp(dt * a) + (dt * x)[:, None] * bm[None, :]
+    ns_ref[0, 0] = new
+    y_ref[0, 0] = jax.lax.dot_general(
+        new, cm, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ).astype(y_ref.dtype)
+
+
+def ssd_decode_step_bh(
+    state: jax.Array,  # (B, H, P, N) f32
+    x_t: jax.Array,    # (B, H, P)
+    dt_t: jax.Array,   # (B, H)
+    A: jax.Array,      # (H,)
+    B_t: jax.Array,    # (B, N)
+    C_t: jax.Array,    # (B, N)
+    *,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Single-token SSD recurrence, one (batch, head) cell per grid step.
+
+    The decode-path analogue of :func:`ssd_scan_bhsp`: the rank-1 state
+    update h' = e^{dt·a} h + (dt·x) B^T and the readout y = h' C run fused
+    in VMEM. Returns (y (B,H,P) in x's dtype, new_state (B,H,P,N) f32).
+    """
+    b, h, p = x_t.shape
+    n = B_t.shape[-1]
+    y, ns = pl.pallas_call(
+        _ssd_decode_kernel,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((1, 1, p, n), lambda b_, h_: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, p), lambda b_, h_: (b_, h_, 0)),
+            pl.BlockSpec((1, 1), lambda b_, h_: (b_, h_)),
+            pl.BlockSpec((1,), lambda b_, h_: (h_,)),
+            pl.BlockSpec((1, n), lambda b_, h_: (b_, 0)),
+            pl.BlockSpec((1, n), lambda b_, h_: (b_, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, p), lambda b_, h_: (b_, h_, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda b_, h_: (b_, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, p), x_t.dtype),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(state, x_t, dt_t, A, B_t, C_t)
+    return y, ns

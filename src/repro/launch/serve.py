@@ -62,7 +62,14 @@ def main() -> int:
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--max-batch", type=int, default=4,
                     help="lockstep micro-batch size / paged slot count")
-    ap.add_argument("--engine", choices=["paged", "lockstep"], default="paged")
+    ap.add_argument("--engine", choices=["paged", "lockstep"], default="paged",
+                    help="'paged' (default) picks the continuous-batching "
+                         "engine for the config's family — page-pool KV for "
+                         "dense/moe/vlm, the recurrent-state SSM engine for "
+                         "ssm/hybrid — and fails loudly "
+                         "(UnsupportedConfigError) when no continuous-"
+                         "batching engine supports the config; 'lockstep' "
+                         "forces the micro-batching baseline")
     ap.add_argument("--admission", choices=["fifo", "priority", "deadline"],
                     default="fifo", help="admission policy for every worker")
     ap.add_argument("--prefill-chunk", type=int, default=64,
@@ -129,6 +136,11 @@ def main() -> int:
                          "on TPU and the XLA reference elsewhere; 'pallas' "
                          "on a non-TPU backend falls back to the reference "
                          "with a one-time warning")
+    ap.add_argument("--ssd-impl", default="auto",
+                    choices=["auto", "pallas", "pallas_interpret",
+                             "xla_chunked", "naive"],
+                    help="ssm engine: SSD scan/decode lowering — same "
+                         "auto/fallback contract as --attn-impl")
     ap.add_argument("--fleet", type=int, default=0, metavar="N",
                     help="run the supervised fleet instead of the flat "
                          "worker pool: a FleetSupervisor with N initial "
@@ -158,6 +170,8 @@ def main() -> int:
         FIFOAdmission,
         GenerationEngine,
         PriorityAdmission,
+        SSMEngine,
+        UnsupportedConfigError,
         format_latency,
         request_from_message,
     )
@@ -172,10 +186,23 @@ def main() -> int:
     if args.reduced:
         cfg = reduced(cfg)
     paged_ok = not cfg.is_encoder_decoder and cfg.family in ("dense", "moe", "vlm")
+    ssm_ok = not cfg.is_encoder_decoder and cfg.family in ("ssm", "hybrid")
     use_paged = args.engine == "paged" and paged_ok
-    if use_paged and args.mesh != "auto":
+    use_ssm = args.engine == "paged" and ssm_ok
+    if args.engine == "paged" and not (use_paged or use_ssm):
+        # no silent lockstep downgrade: the caller asked for continuous
+        # batching, and neither the page-pool nor the recurrent-state
+        # engine can serve this config
+        raise UnsupportedConfigError(
+            f"no continuous-batching engine supports {cfg.name} "
+            f"(family={cfg.family!r}, encoder_decoder="
+            f"{cfg.is_encoder_decoder}); pass --engine lockstep to serve "
+            f"it with the micro-batching baseline"
+        )
+    sharded = use_paged or use_ssm  # both executors run under shard_map
+    if sharded and args.mesh != "auto":
         set_default_serving_mesh(make_serving_mesh(int(args.mesh)))
-    mesh_desc = describe_mesh(default_serving_mesh(cfg)) if use_paged else "n/a"
+    mesh_desc = describe_mesh(default_serving_mesh(cfg)) if sharded else "n/a"
     workdir = Path(args.workdir)
     workdir.mkdir(parents=True, exist_ok=True)
     bus = TopicBus(workdir / "bus")
@@ -184,7 +211,7 @@ def main() -> int:
 
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
-    if use_paged:
+    if sharded:
         # validates the mesh ONCE in the main thread (a bad --mesh N fails
         # fast here, not inside every worker) and pre-shards the weights so
         # all workers share one placed copy instead of each materializing
@@ -241,6 +268,15 @@ def main() -> int:
                 speculative=args.spec,
                 spec_k=args.spec_k,
                 draft_config=draft_config,
+            )
+        if use_ssm:
+            return SSMEngine(
+                cfg, params, max_len=max_len,
+                max_slots=max(args.max_batch, 2),
+                prefill_chunk=args.prefill_chunk or None,
+                admission=admission,
+                attn_impl=args.attn_impl,
+                ssd_impl=args.ssd_impl,
             )
         return GenerationEngine(cfg, params, max_len=max_len,
                                 max_batch=args.max_batch, admission=admission)
@@ -342,7 +378,7 @@ def main() -> int:
     wall = time.time() - t0
     print(f"served {len(done)}/{args.requests} requests in {wall:.1f}s "
           f"({len(done)*args.max_new/wall:.1f} tok/s), "
-          f"engine={'paged' if use_paged else 'lockstep'}, "
+          f"engine={'paged' if use_paged else 'ssm' if use_ssm else 'lockstep'}, "
           f"admission={args.admission}, mesh={mesh_desc}, "
           f"peak workers={len(threads)}")
     summary = format_latency(latencies)

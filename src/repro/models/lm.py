@@ -547,7 +547,9 @@ class DecoderLM:
             def body(x, inp):
                 pl, cl = inp
                 h = rms_norm(x, pl["ln"], cfg.norm_eps)
-                h, new_cl = ssm_mod.mamba_decode(pl["mamba"], h, cl, cfg)
+                h, new_cl = ssm_mod.mamba_decode(
+                    pl["mamba"], h, cl, cfg, ssd_impl=self.ssd_impl
+                )
                 return x + h, new_cl
 
             x, mam = jax.lax.scan(body, x, (params["layers"], cache["mamba"]))
@@ -579,7 +581,9 @@ class DecoderLM:
                 def mbody(xc, inp2):
                     pl, cl = inp2
                     hh = rms_norm(xc, pl["ln"], cfg.norm_eps)
-                    hh, new_cl = ssm_mod.mamba_decode(pl["mamba"], hh, cl, cfg)
+                    hh, new_cl = ssm_mod.mamba_decode(
+                        pl["mamba"], hh, cl, cfg, ssd_impl=self.ssd_impl
+                    )
                     return xc + hh, new_cl
 
                 x, new_mcs = jax.lax.scan(mbody, x, (pg, mcg))
@@ -820,3 +824,204 @@ class DecoderLM:
             preferred_element_type=jnp.float32,
         ))[0]  # (C, Vp)
         return new_pages, logits
+
+    # ------------------------------------------------------------------
+    # recurrent-state serving (SSM / hybrid continuous batching)
+    # ------------------------------------------------------------------
+    def decode_step_ssm(self, params, state, tokens, active):
+        """One token per in-flight slot against the per-slot state bank.
+
+        state: the ``init_mamba_cache`` pytree stacked over layers and
+        batched over slots — ssm (L,S,HN,PN,N) f32 plus conv tails. tokens
+        (S, 1) int32 is each slot's last token; active (S,) int32 masks
+        idle slots, whose state is left untouched (their rows still run —
+        shapes stay static so the jitted step never recompiles — but the
+        writeback is gated). Returns (new_state, logits (S, Vp) f32).
+        """
+        cfg = self.cfg
+        assert cfg.family == "ssm", cfg.family
+        x = jnp.take(params["embed"], tokens, axis=0)  # (S,1,D)
+
+        def body(x, inp):
+            pl, cl = inp
+            h = rms_norm(x, pl["ln"], cfg.norm_eps)
+            h, new_cl = ssm_mod.mamba_decode(
+                pl["mamba"], h, cl, cfg, ssd_impl=self.ssd_impl
+            )
+            return x + h, new_cl
+
+        x, new_state = jax.lax.scan(body, x, (params["layers"], dict(state)))
+        new_state = self._mask_state(new_state, dict(state), active)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = all_gather_logits(jnp.einsum(
+            "bsd,dv->bsv", x, self._unembed_weight(params),
+            preferred_element_type=jnp.float32,
+        ))[:, 0]
+        return new_state, logits
+
+    def prefill_chunk_ssm(self, params, state_slot, tokens, valid):
+        """One fixed-size prefill chunk of ONE sequence through the SSD
+        scan, continuing from (and returning) the slot's carried state.
+
+        state_slot: one slot's state with the slot axis kept singleton —
+        ssm (L,1,HN,PN,N) f32 plus conv tails. tokens (C,) int32 (C
+        static); valid (scalar int32) is the number of real tokens in this
+        possibly-padded chunk (padded positions are exact identities on
+        the recurrence — see ``mamba_prefill_chunk``). Returns
+        (new_state_slot, logits (Vp,) f32) where logits belong to chunk
+        position ``valid - 1`` — meaningful on the prompt's final chunk,
+        garbage (and ignored) before that.
+        """
+        cfg = self.cfg
+        assert cfg.family == "ssm", cfg.family
+        x = jnp.take(params["embed"], tokens[None], axis=0)  # (1,C,D)
+
+        def body(x, inp):
+            pl, cl = inp
+            h = rms_norm(x, pl["ln"], cfg.norm_eps)
+            h, new_cl = ssm_mod.mamba_prefill_chunk(
+                pl["mamba"], h, cl, cfg, valid=valid, ssd_impl=self.ssd_impl
+            )
+            return x + h, new_cl
+
+        x, new_state = jax.lax.scan(body, x, (params["layers"], dict(state_slot)))
+        x = jax.lax.dynamic_slice_in_dim(
+            x, jnp.maximum(valid - 1, 0), 1, axis=1
+        )
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = all_gather_logits(jnp.einsum(
+            "bsd,dv->bsv", x, self._unembed_weight(params),
+            preferred_element_type=jnp.float32,
+        ))[0, 0]
+        return new_state, logits
+
+    def decode_step_hybrid(self, params, pages, state, block_tables,
+                           lengths, tokens, active):
+        """Hybrid (Zamba2) paged decode: the shared attention block reads
+        and writes the g-layer paged KV pool (g = L // attn_every) while
+        every Mamba layer steps the per-slot state bank — one fused pass.
+
+        pages: {"k": (g,P,page,KVH,Dh), "v": ...}; state: the stacked
+        mamba bank (slot axis second); block_tables (S, MP) / lengths (S,)
+        index the attention pool exactly like ``decode_step_paged``.
+        Returns (new_pages, new_state, logits (S, Vp) f32).
+        """
+        cfg = self.cfg
+        assert cfg.family == "hybrid", cfg.family
+        g = cfg.num_layers // cfg.attn_every
+        x = jnp.take(params["embed"], tokens, axis=0)  # (S,1,D)
+        grouped = jax.tree.map(
+            lambda a: a.reshape((g, cfg.attn_every) + a.shape[1:]),
+            params["layers"],
+        )
+        gstate = jax.tree.map(
+            lambda a: a.reshape((g, cfg.attn_every) + a.shape[1:]), dict(state)
+        )
+        shared = params["shared"]
+
+        def group_body(x, inp):
+            pg, mcg, cl = inp
+            h = rms_norm(x, shared["ln1"], cfg.norm_eps)
+            h, new_cl = attn.decode_self_attention_paged(
+                shared["attn"], h, cl, block_tables, lengths, cfg,
+                attn_impl=self.attn_impl,
+            )
+            x = x + h
+            h = rms_norm(x, shared["ln2"], cfg.norm_eps)
+            x = x + swiglu(h, shared["mlp"]["w_gate"], shared["mlp"]["w_up"],
+                           shared["mlp"]["w_down"])
+
+            def mbody(xc, inp2):
+                pl, cl2 = inp2
+                hh = rms_norm(xc, pl["ln"], cfg.norm_eps)
+                hh, new_cl2 = ssm_mod.mamba_decode(
+                    pl["mamba"], hh, cl2, cfg, ssd_impl=self.ssd_impl
+                )
+                return xc + hh, new_cl2
+
+            x, new_mcs = jax.lax.scan(mbody, x, (pg, mcg))
+            return x, {"kv": new_cl, "mamba": new_mcs}
+
+        x, ys = jax.lax.scan(group_body, x, (grouped, gstate, dict(pages)))
+        new_state = jax.tree.map(
+            lambda a: a.reshape((cfg.num_layers,) + a.shape[2:]), ys["mamba"]
+        )
+        new_state = self._mask_state(new_state, dict(state), active)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = all_gather_logits(jnp.einsum(
+            "bsd,dv->bsv", x, self._unembed_weight(params),
+            preferred_element_type=jnp.float32,
+        ))[:, 0]
+        return ys["kv"], new_state, logits
+
+    def prefill_chunk_hybrid(self, params, pages, state_slot, block_table,
+                             tokens, start, valid):
+        """Hybrid chunked prefill of ONE sequence: attention chunk rows
+        scatter into the sequence's pages (positions ``start..start+valid``)
+        while the Mamba layers continue from the slot's carried state.
+        Returns (new_pages, new_state_slot, logits (Vp,) f32) with logits
+        at chunk position ``valid - 1`` as in ``prefill_chunk``.
+        """
+        cfg = self.cfg
+        assert cfg.family == "hybrid", cfg.family
+        g = cfg.num_layers // cfg.attn_every
+        x = jnp.take(params["embed"], tokens[None], axis=0)  # (1,C,D)
+        grouped = jax.tree.map(
+            lambda a: a.reshape((g, cfg.attn_every) + a.shape[1:]),
+            params["layers"],
+        )
+        gstate = jax.tree.map(
+            lambda a: a.reshape((g, cfg.attn_every) + a.shape[1:]),
+            dict(state_slot),
+        )
+        shared = params["shared"]
+
+        def group_body(x, inp):
+            pg, mcg, cl = inp
+            h = rms_norm(x, shared["ln1"], cfg.norm_eps)
+            h, new_cl = attn.prefill_chunk_attention_paged(
+                shared["attn"], h, cl, block_table, start, valid, cfg,
+                attn_impl=self.attn_impl,
+            )
+            x = x + h
+            h = rms_norm(x, shared["ln2"], cfg.norm_eps)
+            x = x + swiglu(h, shared["mlp"]["w_gate"], shared["mlp"]["w_up"],
+                           shared["mlp"]["w_down"])
+
+            def mbody(xc, inp2):
+                pl, cl2 = inp2
+                hh = rms_norm(xc, pl["ln"], cfg.norm_eps)
+                hh, new_cl2 = ssm_mod.mamba_prefill_chunk(
+                    pl["mamba"], hh, cl2, cfg, valid=valid,
+                    ssd_impl=self.ssd_impl,
+                )
+                return xc + hh, new_cl2
+
+            x, new_mcs = jax.lax.scan(mbody, x, (pg, mcg))
+            return x, {"kv": new_cl, "mamba": new_mcs}
+
+        x, ys = jax.lax.scan(group_body, x, (grouped, gstate, dict(pages)))
+        new_state = jax.tree.map(
+            lambda a: a.reshape((cfg.num_layers,) + a.shape[2:]), ys["mamba"]
+        )
+        x = jax.lax.dynamic_slice_in_dim(
+            x, jnp.maximum(valid - 1, 0), 1, axis=1
+        )
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = all_gather_logits(jnp.einsum(
+            "bsd,dv->bsv", x, self._unembed_weight(params),
+            preferred_element_type=jnp.float32,
+        ))[0, 0]
+        return ys["kv"], new_state, logits
+
+    @staticmethod
+    def _mask_state(new_state, old_state, active):
+        """Gate the state-bank writeback on per-slot activity (slot axis
+        is second — leaves are stacked (L, S, ...))."""
+        keep = active.astype(bool)
+
+        def leaf(new, old):
+            m = keep.reshape((1, -1) + (1,) * (new.ndim - 2))
+            return jnp.where(m, new, old)
+
+        return jax.tree.map(leaf, new_state, old_state)

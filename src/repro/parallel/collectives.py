@@ -83,6 +83,19 @@ def psum_tp(x: jax.Array) -> jax.Array:
     return jax.lax.psum(x, ax) if ax is not None else x
 
 
+def pmean_tp(x: jax.Array) -> jax.Array:
+    """Mean over the tensor-parallel axis.
+
+    Normalization layers whose reduction axis is sharded (the Mamba gated
+    RMSNorm runs over the ff-sharded ``d_inner`` dim) need the *global*
+    mean of squares; since every shard holds an equal-size slice, the
+    global mean is exactly the mean of the shard-local means. Identity
+    outside a :func:`tensor_parallel` context.
+    """
+    ax = tp_axis()
+    return jax.lax.pmean(x, ax) if ax is not None else x
+
+
 def all_gather_logits(x: jax.Array) -> jax.Array:
     """Reassemble full-vocab logits from a column-parallel unembed.
 

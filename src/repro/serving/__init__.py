@@ -15,7 +15,9 @@ ArtifactStore — with async prefetch back on prefix hits.
 ``repro.serving.speculative`` breaks the one-token-per-dispatch decode
 chain: an n-gram or draft-model proposer drafts k tokens and one fused
 verify dispatch scores them all, streams staying byte-identical to
-spec-off.
+spec-off. ``repro.serving.ssm_engine`` serves the recurrent-state
+families (Mamba2/Zamba2): the same engine protocol over a per-slot
+recurrent-state bank instead of a page pool.
 """
 
 from repro.serving.api import (
@@ -30,6 +32,7 @@ from repro.serving.api import (
     Result,
     SamplingParams,
     StreamEvent,
+    UnsupportedConfigError,
     request_from_message,
 )
 from repro.serving.engine import ContinuousBatchingEngine, GenerationEngine
@@ -48,6 +51,7 @@ from repro.serving.speculative import (
     SpeculativeProposer,
     build_proposer,
 )
+from repro.serving.ssm_engine import SlotStateBank, SSMEngine
 
 __all__ = [
     "AdmissionPolicy",
@@ -70,9 +74,12 @@ __all__ = [
     "Request",
     "RequestHandle",
     "Result",
+    "SSMEngine",
     "SamplingParams",
+    "SlotStateBank",
     "SpeculativeProposer",
     "StreamEvent",
+    "UnsupportedConfigError",
     "build_proposer",
     "fleet_seed",
     "format_latency",

@@ -387,6 +387,17 @@ class DeadlineAdmission(_LazyHeapAdmission):
 # ---------------------------------------------------------------------------
 
 
+class UnsupportedConfigError(ValueError):
+    """No serving engine supports this model config.
+
+    Raised by launch-time engine selection instead of silently falling
+    back to a weaker engine: a driver asked for a family/feature
+    combination (e.g. encoder-decoder behind the paged engine) that every
+    available engine rejects, so the deployment must fail loudly up front
+    rather than serve with surprising semantics.
+    """
+
+
 def validate_request(req: Request, *, max_len: int, extra_ctx: int = 0) -> None:
     """Boundary checks shared by every engine and ingress path.
 

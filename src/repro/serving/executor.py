@@ -96,12 +96,19 @@ def serving_mesh_scope(mesh: Mesh | None):
 
 def _tp_dims(cfg) -> list[int]:
     """Tensor dims the mesh size must divide for this config."""
-    dims = [cfg.eff_kv_heads, cfg.eff_heads]
+    # pure-SSM configs carry default head fields no layer ever uses —
+    # only constrain on attention dims when attention layers exist
+    dims = [] if cfg.family == "ssm" else [cfg.eff_kv_heads, cfg.eff_heads]
+    if cfg.ssm_state:
+        # SSM/hybrid: d_inner is ff-sharded and the state bank shards on
+        # ssm_heads; keep both so pure-SSM configs never vacuously admit
+        # any mesh size
+        dims += [cfg.ssm_heads, cfg.d_inner]
     if cfg.d_ff:
         dims.append(cfg.d_ff)
     if not cfg.tie_embeddings:
         dims.append(padded_vocab(cfg))
-    return dims
+    return [d for d in dims if d]
 
 
 def pick_tp(cfg, num_devices: int | None = None) -> int:
@@ -147,6 +154,7 @@ def _serving_param_specs(model, mesh: Mesh, vocab_sharded: bool):
         "heads": "model",
         "kv_heads": "model",
         "ff": "model",
+        "ssm_heads": "model",
         "vocab": "model" if vocab_sharded else None,
     }
     is_leaf = lambda v: v is None or (

@@ -1,11 +1,12 @@
-"""Protocol-conformance suite: BOTH engines behind one contract.
+"""Protocol-conformance suite: every engine behind one contract.
 
 Every test below is parameterized over ``GenerationEngine`` (lockstep,
-micro-batches chunked into steps) and ``ContinuousBatchingEngine`` (paged)
-via a single fixture — the point of the serving API redesign is that the
-two are indistinguishable through ``submit``/``step``/``cancel``:
-streaming delta ordering, cancellation mid-decode, stop-token termination,
-typed rejection surfacing, seeded reproducibility, and abort.
+micro-batches chunked into steps), ``ContinuousBatchingEngine`` (paged)
+and ``SSMEngine`` (per-slot recurrent state, Mamba2) via a single fixture
+— the point of the serving API redesign is that the engines are
+indistinguishable through ``submit``/``step``/``cancel``: streaming delta
+ordering, cancellation mid-decode, stop-token termination, typed
+rejection surfacing, seeded reproducibility, and abort.
 """
 
 import jax
@@ -20,6 +21,7 @@ from repro.serving import (
     GenerationEngine,
     Request,
     SamplingParams,
+    SSMEngine,
 )
 
 
@@ -31,16 +33,27 @@ def smollm():
     return cfg, params
 
 
-@pytest.fixture(params=["paged", "lockstep"])
-def make_engine(request, smollm):
-    cfg, params = smollm
+@pytest.fixture(scope="module")
+def mamba2():
+    cfg = reduced(ARCHS["mamba2-1.3b"])
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, params
+
+
+@pytest.fixture(params=["paged", "lockstep", "ssm"])
+def make_engine(request, smollm, mamba2):
     kind = request.param
+    cfg, params = mamba2 if kind == "ssm" else smollm
 
     def factory(**kw):
         if kind == "paged":
             return ContinuousBatchingEngine(
                 cfg, params, max_len=kw.pop("max_len", 64),
                 max_slots=kw.pop("slots", 3), page_size=8, **kw)
+        if kind == "ssm":
+            return SSMEngine(cfg, params, max_len=kw.pop("max_len", 64),
+                             max_slots=kw.pop("slots", 3), **kw)
         return GenerationEngine(cfg, params, max_len=kw.pop("max_len", 64),
                                 max_batch=kw.pop("slots", 3), **kw)
 

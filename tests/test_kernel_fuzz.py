@@ -527,8 +527,8 @@ def _ssd_sweep():
     rng = np.random.default_rng(0x55D)
     for _ in range(8):
         chunk = int(rng.choice([8, 16, 32]))
-        # s NOT necessarily divisible by chunk: exercises the sequential
-        # remainder path carrying the kernel's final state
+        # s NOT necessarily divisible by chunk: exercises the pad-and-mask
+        # path (dt=0 tail positions are identities on the recurrence)
         cases.append((
             int(rng.integers(1, 3)), chunk * int(rng.integers(1, 4))
             + int(rng.choice([0, 3])), int(rng.choice([1, 2, 4])),
@@ -552,6 +552,58 @@ def test_ssd_kernel_vs_oracle(params):
                                  impl="pallas_interpret")
     _assert_close(y_got, y_want, params, "ssd_y")
     _assert_close(st_got, st_want, params, "ssd_state")
+
+
+@pytest.mark.parametrize("params", _ssd_sweep(),
+                         ids=lambda p: "b{}s{}h{}p{}n{}c{}".format(*p))
+def test_ssd_kernel_vs_oracle_with_init_state(params):
+    """Carried-state continuation (chunked serving prefill): the kernel path
+    must thread ``init_state`` exactly like the literal recurrence, on the
+    same non-chunk-multiple lengths as the fresh-state sweep."""
+    b, s, h, p, n, chunk = params
+    rng = np.random.default_rng(sum(params) ^ 0x1517)
+    x = rng.standard_normal((b, s, h, p)).astype(np.float32)
+    dt = (0.1 + 0.9 * rng.random((b, s, h))).astype(np.float32)
+    A = (-1.0 * rng.random((h,)) - 0.1).astype(np.float32)
+    Bm = (rng.standard_normal((b, s, n)) / np.sqrt(n)).astype(np.float32)
+    Cm = (rng.standard_normal((b, s, n)) / np.sqrt(n)).astype(np.float32)
+    h0 = rng.standard_normal((b, h, p, n)).astype(np.float32)
+    y_want, st_want = ref.ssd_sequential(x, dt, A, Bm, Cm, init_state=h0)
+    y_got, st_got = ops.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk,
+                                 impl="pallas_interpret", init_state=h0)
+    _assert_close(y_got, y_want, params, "ssd_y_h0")
+    _assert_close(st_got, st_want, params, "ssd_state_h0")
+
+
+def _ssd_decode_sweep():
+    cases = []
+    rng = np.random.default_rng(0xDECD)
+    for _ in range(6):
+        cases.append((int(rng.integers(1, 5)), int(rng.choice([1, 2, 4, 8])),
+                      int(rng.choice([8, 16, 64])), int(rng.choice([16, 32]))))
+    return cases
+
+
+def _ssd_decode_case(params, seed):
+    b, h, p, n = params
+    rng = np.random.default_rng(seed + sum(params))
+    state = rng.standard_normal((b, h, p, n)).astype(np.float32)
+    x_t = rng.standard_normal((b, h, p)).astype(np.float32)
+    dt_t = (0.1 + 0.9 * rng.random((b, h))).astype(np.float32)
+    A = (-1.0 * rng.random((h,)) - 0.1).astype(np.float32)
+    B_t = (rng.standard_normal((b, n)) / np.sqrt(n)).astype(np.float32)
+    C_t = (rng.standard_normal((b, n)) / np.sqrt(n)).astype(np.float32)
+    return state, x_t, dt_t, A, B_t, C_t
+
+
+@pytest.mark.parametrize("params", _ssd_decode_sweep(),
+                         ids=lambda p: "b{}h{}p{}n{}".format(*p))
+def test_ssd_decode_step_kernel_vs_oracle(params):
+    args = _ssd_decode_case(params, 0)
+    y_want, st_want = ref.ssd_decode_step(*args)
+    y_got, st_got = ops.ssd_decode_step(*args, impl="pallas_interpret")
+    _assert_close(y_got, y_want, params, "ssd_dec_y")
+    _assert_close(st_got, st_want, params, "ssd_dec_state")
 
 
 # ---------------------------------------------------------------------------
@@ -713,3 +765,16 @@ def test_pallas_fallback_warns_once_and_matches_ref():
     with warnings.catch_warnings():
         warnings.simplefilter("error")
         ops.paged_attention(qd, kpd, vpd, btd, lens, impl="pallas")
+
+    # the serving decode hot-path op must obey the same policy: off-TPU
+    # impl='pallas' pins to ref.ssd_decode_step bit-for-bit after one warning
+    dargs = _ssd_decode_case((2, 4, 16, 32), 0)
+    ops._PALLAS_FALLBACK_WARNED.discard("ssd_decode_step")
+    with pytest.warns(RuntimeWarning, match="falling back"):
+        y_got, st_got = ops.ssd_decode_step(*dargs, impl="pallas")
+    y_want, st_want = ref.ssd_decode_step(*dargs)
+    np.testing.assert_array_equal(np.asarray(y_got), np.asarray(y_want))
+    np.testing.assert_array_equal(np.asarray(st_got), np.asarray(st_want))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        ops.ssd_decode_step(*dargs, impl="pallas")

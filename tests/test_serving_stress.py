@@ -29,6 +29,7 @@ from repro.serving import (
     GenerationEngine,
     Request,
     SamplingParams,
+    SSMEngine,
 )
 from repro.serving.kv_cache import NULL_PAGE
 
@@ -501,6 +502,194 @@ def test_lockstep_engine_invariants_under_stress(smollm, seed):
     oracle = _replay(cfg, params, GenerationEngine, reqs, max_batch=4,
                      seed=seed)
     for uid, h in handles.items():
+        want = oracle[uid].tokens
+        if uid in cancelled:
+            assert h.tokens == want[:len(h.tokens)], uid
+        else:
+            assert h.tokens == want, uid
+
+# ---------------------------------------------------------------------------
+# SSM / hybrid recurrent-state engine arms
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def mamba2():
+    cfg = reduced(ARCHS["mamba2-1.3b"])
+    model = build_model(cfg)
+    return cfg, model.init(jax.random.key(0))
+
+
+@pytest.fixture(scope="module")
+def zamba2():
+    cfg = reduced(ARCHS["zamba2-2.7b"])
+    model = build_model(cfg)
+    return cfg, model.init(jax.random.key(0))
+
+
+def _check_ssm_invariants(engine: SSMEngine) -> None:
+    """Slot-bank bookkeeping: live sequences and the free list exactly
+    partition the slot range (pure SSM) or match the cache's occupancy
+    (hybrid), and parked state snapshots belong only to evicted-but-live
+    requests — never to an occupant or a finished handle."""
+    live = set(engine.slots)
+    if engine.hybrid:
+        cache = engine.cache
+        assert live == {s for s in range(cache.max_slots)
+                        if cache._slot_pages[s]}, "slot/page-map mismatch"
+    else:
+        free = engine._free
+        assert len(set(free)) == len(free), "double-freed slot"
+        assert not set(free) & live, "slot simultaneously free and live"
+        assert set(free) | live == set(range(engine.max_slots)), "leaked slot"
+    for slot, seq in engine.slots.items():
+        assert len(seq.tokens) <= seq.request.sampling.max_new_tokens
+        assert seq.request.uid not in engine._snapshots, (
+            f"slot {slot}: occupant still has a parked snapshot")
+    for uid in engine._snapshots:
+        h = engine._handles.get(uid)
+        assert h is not None and not h.done, (
+            f"snapshot parked for finished/unknown request {uid}")
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_ssm_engine_invariants_under_stress(mamba2, seed):
+    """The randomized submit/cancel trace on the recurrent-state engine,
+    with forced youngest-first preemptions injected mid-trace — alternating
+    discard (re-prefill) and snapshot (state restored verbatim) eviction —
+    and only 2 slots so the queue stays under pressure. Every surviving
+    stream must be byte-identical to an unperturbed replay: preemption of
+    either flavor is invisible under the (seed, token_index)-keyed
+    sampler."""
+    cfg, params = mamba2
+    reqs, actions, _attempted = _make_trace(seed, n=10)
+    by_uid = {r.uid: r for r in reqs}
+    engine = SSMEngine(cfg, params, max_len=MAX_LEN, max_slots=2,
+                       prefill_chunk=PAGE, seed=seed)
+    handles, cancelled = {}, set()
+    preempt_at = {4: False, 7: True, 10: False, 13: True}  # step -> snapshot
+    step = 0
+    while True:
+        for kind, uid in actions.get(step, []):
+            if kind == "submit":
+                handles[uid] = engine.submit(by_uid[uid])
+            elif engine.cancel(uid):
+                cancelled.add(uid)
+        if step in preempt_at:
+            engine.preempt_youngest(snapshot=preempt_at[step])
+        engine.step()
+        _check_ssm_invariants(engine)
+        step += 1
+        if all(s <= step for s in actions) and engine.idle:
+            break
+        assert step < 600, "trace failed to drain"
+    assert engine.stats["preemptions"] > 0
+    assert engine.stats["restores"] > 0, (
+        "no snapshot preemption ever restored: move the snapshot steps")
+    assert not engine._snapshots, "parked snapshot leaked past drain"
+    assert len(engine._free) == engine.max_slots
+
+    oracle = _replay(cfg, params, SSMEngine, reqs, max_slots=2,
+                     prefill_chunk=PAGE, seed=seed)
+    for uid, h in handles.items():
+        assert isinstance(h.finish_reason, FinishReason), uid
+        want = oracle[uid].tokens
+        if uid in cancelled:
+            assert h.tokens == want[:len(h.tokens)], uid
+        else:
+            assert h.tokens == want, uid
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_ssm_engine_restart_mid_trace(mamba2, seed):
+    """Crash-replay arm for the SSM engine (the PR-7 fleet recovery model):
+    the engine dies mid-trace — recurrent state gone, handles stranded —
+    and a fresh engine re-serves every in-flight request under its original
+    sampling seed. The resumed sequences re-prefill from scratch, yet the
+    combined streams must be byte-identical to the unperturbed oracle with
+    the pre-crash delivery an exact prefix of the regenerated stream."""
+    cfg, params = mamba2
+    reqs, actions, _attempted = _make_trace(seed, n=10)
+    by_uid = {r.uid: r for r in reqs}
+    kw = dict(max_slots=3, prefill_chunk=PAGE, seed=seed)
+    engine = SSMEngine(cfg, params, max_len=MAX_LEN, **kw)
+    handles, cancelled = {}, set()
+    # crash once the trace is genuinely mid-flight: past the submit bursts
+    # and cancels, with at least one request mid-stream (the chunked SSM
+    # prefill makes the fixed-step-6 crash of the paged arm too early on
+    # some seeds)
+    step = 0
+    while True:
+        for kind, uid in actions.get(step, []):
+            if kind == "submit":
+                handles[uid] = engine.submit(by_uid[uid])
+            elif engine.cancel(uid):
+                cancelled.add(uid)
+        engine.step()
+        _check_ssm_invariants(engine)
+        step += 1
+        mid_stream = any(h.tokens for h in handles.values() if not h.done)
+        if step >= 6 and all(s < step for s in actions) and mid_stream:
+            break
+        assert step < 600, "trace never reached a crashable state"
+
+    delivered = {uid: list(h.tokens) for uid, h in handles.items()}
+    pre_crash = {uid: h for uid, h in handles.items() if h.done}
+    inflight = [uid for uid, h in handles.items() if not h.done]
+    assert inflight, "crash step too late: nothing was in flight"
+    assert any(delivered[u] for u in inflight), (
+        "crash step too early: no mid-stream request to resume")
+    del engine
+
+    engine2 = SSMEngine(cfg, params, max_len=MAX_LEN, **kw)
+    handles2 = {
+        uid: engine2.submit(Request(uid, list(by_uid[uid].prompt),
+                                    sampling=by_uid[uid].sampling))
+        for uid in inflight
+    }
+    steps = 0
+    while not engine2.idle:
+        engine2.step()
+        _check_ssm_invariants(engine2)
+        steps += 1
+        assert steps < 600, "restarted trace failed to drain"
+
+    oracle = _replay(cfg, params, SSMEngine, reqs, **kw)
+    for uid, h in pre_crash.items():
+        want = oracle[uid].tokens
+        if uid in cancelled:
+            assert h.tokens == want[:len(h.tokens)], uid
+        else:
+            assert h.tokens == want, uid
+    for uid, h in handles2.items():
+        assert h.finish_reason in (FinishReason.LENGTH, FinishReason.STOP), uid
+        assert h.tokens == oracle[uid].tokens, uid
+        pre = delivered[uid]
+        assert h.tokens[:len(pre)] == pre, (
+            f"{uid}: pre-crash delivery is not a prefix of the replay")
+
+
+@pytest.mark.parametrize("seed", [0])
+def test_hybrid_engine_invariants_under_stress(zamba2, seed):
+    """Hybrid (Zamba2) arm: attention pages and recurrent state advance in
+    the same step, with the page pool sized so decode-time growth runs it
+    dry and ORGANIC youngest-first preemption fires. Streams must still be
+    byte-identical to an unpressured replay."""
+    cfg, params = zamba2
+    reqs, actions, _attempted = _make_trace(seed, n=10)
+    engine = SSMEngine(cfg, params, max_len=MAX_LEN, max_slots=4,
+                       page_size=PAGE, num_pages=8, prefill_chunk=PAGE,
+                       seed=seed)
+    handles, _events, cancelled = _drive(engine, reqs, actions,
+                                         _check_ssm_invariants)
+    assert engine.stats["preemptions"] > 0, (
+        "trace too gentle: hybrid page-pressure preemption never fired")
+    assert engine.cache.pool.available == engine.cache.num_pages - 1
+
+    oracle = _replay(cfg, params, SSMEngine, reqs, max_slots=4,
+                     page_size=PAGE, prefill_chunk=PAGE, seed=seed)
+    for uid, h in handles.items():
+        assert isinstance(h.finish_reason, FinishReason), uid
         want = oracle[uid].tokens
         if uid in cancelled:
             assert h.tokens == want[:len(h.tokens)], uid
